@@ -1,0 +1,48 @@
+"""Paper §IV.A: inference-system overhead, measured by swapping every
+predictor for a fake zero-returning one (the accumulator still gathers and
+combines segments).  The paper reports <=2% of total inference time."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ensemble
+from repro.core import AllocationMatrix, host_cpus
+
+GiB = 1024 ** 3
+
+
+def run(csv=True, n_samples=512, seq=16):
+    import jax
+    import repro.models as M
+    from repro.serving.system import InferenceSystem
+    cfgs = ensemble("ENS4")
+    rng = jax.random.PRNGKey(0)
+    params = [M.init_params(jax.random.fold_in(rng, i), c)
+              for i, c in enumerate(cfgs)]
+    devs = host_cpus(2, memory_bytes=4 * GiB)
+    A = np.array([[8, 0, 16, 8],
+                  [8, 16, 0, 0]])
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    X = np.random.default_rng(0).integers(0, 512, (n_samples, seq)).astype(np.int32)
+
+    with InferenceSystem(cfgs, params, alloc, segment_size=128,
+                         max_seq=seq, fake=True) as fake_sys:
+        _, fake_thr = fake_sys.benchmark(X, repeats=3)
+    with InferenceSystem(cfgs, params, alloc, segment_size=128,
+                         max_seq=seq) as real_sys:
+        _, real_thr = real_sys.benchmark(X)
+
+    fake_time = n_samples / fake_thr          # pipeline-only time
+    real_time = n_samples / real_thr
+    overhead_pct = 100.0 * fake_time / real_time
+    if csv:
+        print("overhead:metric,value")
+        print(f"overhead:pipeline_time_s,{fake_time:.4f}")
+        print(f"overhead:total_time_s,{real_time:.4f}")
+        print(f"overhead:overhead_pct,{overhead_pct:.2f}")
+    return {"pipeline_s": fake_time, "total_s": real_time,
+            "overhead_pct": overhead_pct}
+
+
+if __name__ == "__main__":
+    run()

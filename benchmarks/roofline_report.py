@@ -1,0 +1,21 @@
+"""Deliverable (g) report: the roofline table from the dry-run artifacts —
+one row per (arch x shape x mesh), three terms + dominant bottleneck."""
+from __future__ import annotations
+
+from repro.launch.roofline import load_rows
+
+
+def run(csv=True):
+    rows = load_rows()
+    if csv:
+        print("roofline:arch,shape,mesh,compute_s,memory_s,collective_s,"
+              "dominant,useful_ratio")
+        for r in rows:
+            print(f"roofline:{r.arch},{r.shape},{r.mesh},{r.compute_s:.3e},"
+                  f"{r.memory_s:.3e},{r.collective_s:.3e},{r.dominant},"
+                  f"{r.useful_ratio:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

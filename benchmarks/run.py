@@ -1,0 +1,41 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table3,...]
+
+Emits CSV lines ``<table>:<fields...>`` so results can be grepped/diffed.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: overhead,table1,table3,stability,roofline")
+    args = ap.parse_args()
+    want = set(filter(None, args.only.split(",")))
+
+    from benchmarks import overhead, roofline_report, stability, table1_throughput, table3_bbs
+    jobs = [
+        ("overhead", overhead.run),          # paper §IV.A
+        ("table1", table1_throughput.run),   # paper Table I
+        ("table3", table3_bbs.run),          # paper Table III
+        ("stability", stability.run),        # paper §IV.B
+        ("roofline", roofline_report.run),   # deliverable (g)
+    ]
+    for name, fn in jobs:
+        if want and name not in want:
+            continue
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{name}:ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper §IV.B stability analysis: relative standard deviation of the
+measured throughput for a fixed allocation matrix (paper: RSD < 2%), and the
+volatility of the bounded greedy's result across seeds when
+max_neighs/total_neighs is low (paper: up to RSD = 16%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ensemble
+from repro.core import (AllocationOptimizer, AnalyticBench, MeasuredBench,
+                        host_cpus, simulated_gpus)
+
+GiB = 1024 ** 3
+
+
+def bench_rsd(repeats=5, n_samples=128, seq=16, csv=True):
+    import jax
+    import repro.models as M
+    from repro.core import AllocationMatrix
+    cfgs = ensemble("ENS4")[:2]
+    rng = jax.random.PRNGKey(0)
+    params = [M.init_params(jax.random.fold_in(rng, i), c)
+              for i, c in enumerate(cfgs)]
+    devs = host_cpus(1, memory_bytes=4 * GiB)
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs],
+                             np.array([[8, 16]]))
+    X = np.random.default_rng(0).integers(0, 512, (n_samples, seq)).astype(np.int32)
+    from repro.serving.system import InferenceSystem
+    scores = []
+    with InferenceSystem(cfgs, params, alloc, segment_size=32,
+                         max_seq=seq) as system:
+        for _ in range(repeats):
+            _, thr = system.benchmark(X)
+            scores.append(thr)
+    rsd = 100.0 * np.std(scores) / np.mean(scores)
+    if csv:
+        print(f"stability:bench_rsd_pct,{rsd:.2f}")
+    return rsd
+
+
+def greedy_volatility(seeds=(0, 1, 2, 3, 4), max_neighs=15, csv=True):
+    cfgs = ensemble("ENS4")
+    devices = simulated_gpus(4, memory_bytes=int(0.15 * GiB)) + \
+        host_cpus(1, 1 * GiB)
+    finals = []
+    for s in seeds:
+        bench = AnalyticBench(cfgs, seq=128)
+        opt = AllocationOptimizer(cfgs, devices, bench, max_iter=10,
+                                  max_neighs=max_neighs, seed=s)
+        finals.append(opt.optimize().final_score)
+    rsd = 100.0 * np.std(finals) / np.mean(finals)
+    if csv:
+        print(f"stability:greedy_rsd_pct_maxneighs{max_neighs},{rsd:.2f}")
+    return rsd
+
+
+def run(csv=True):
+    return {"bench_rsd": bench_rsd(csv=csv),
+            "greedy_rsd": greedy_volatility(csv=csv)}
+
+
+if __name__ == "__main__":
+    run()

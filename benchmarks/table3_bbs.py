@@ -1,0 +1,41 @@
+"""Paper Table III: the Best-Batch-Size baseline vs our allocation-matrix
+optimizer (same asynchronous inference system underneath, different
+allocations) — throughput and number of offline benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ensemble
+from repro.core import (AllocationOptimizer, AnalyticBench, host_cpus,
+                        simulated_gpus)
+from repro.core.bbs import analytic_single_bench, best_batch_strategy
+
+GiB = 1024 ** 3
+
+
+def run(csv=True, seq: int = 128):
+    rows = []
+    cases = [("ENS1", 1), ("ENS4", 4), ("ENS12", 12)]
+    for name, n_gpu in cases:
+        cfgs = ensemble(name)
+        devices = simulated_gpus(n_gpu, memory_bytes=int(0.15 * GiB)) + \
+            host_cpus(1, memory_bytes=1 * GiB)
+        bench = AnalyticBench(cfgs, seq=seq)
+        bbs_alloc, nb = best_batch_strategy(cfgs, devices,
+                                            analytic_single_bench(seq=seq))
+        bbs_score = bench(bbs_alloc)
+        opt = AllocationOptimizer(cfgs, devices, bench, max_iter=10,
+                                  max_neighs=100, seq=seq)
+        res = opt.optimize()
+        rows.append((name, n_gpu, round(bbs_score, 1), nb,
+                     round(res.final_score, 1), res.trace.evaluated,
+                     round(res.final_score / max(bbs_score, 1e-9), 2)))
+    if csv:
+        print("table3:ensemble,gpus,bbs_imgs,bbs_nbench,ours_imgs,ours_nbench,speedup")
+        for r in rows:
+            print("table3:" + ",".join(str(x) for x in r))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""End-to-end serving driver (deliverable b): optimize + deploy an ensemble
+behind the HTTP server, fire batched client requests at it, report latency /
+throughput, then shut down.
+
+Run:  PYTHONPATH=src python examples/serve_ensemble.py [--ensemble ENS4]
+      [--port 8650] [--requests 24] [--combine mean|weighted|vote|pallas]
+"""
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+import repro.models as M
+from repro.configs import ensemble
+from repro.core import AllocationOptimizer, MeasuredBench, host_cpus
+from repro.serving.server import serve
+from repro.serving.system import InferenceSystem
+
+SEQ = 16
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ensemble", default="ENS4")
+    ap.add_argument("--members", type=int, default=3)
+    ap.add_argument("--port", type=int, default=8650)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--combine", default="mean")
+    ap.add_argument("--devices", type=int, default=2)
+    args = ap.parse_args()
+
+    cfgs = ensemble(args.ensemble)[: args.members]
+    rng = jax.random.PRNGKey(0)
+    params = [M.init_params(jax.random.fold_in(rng, i), c)
+              for i, c in enumerate(cfgs)]
+    print("members:", [c.name for c in cfgs])
+
+    devices = host_cpus(args.devices, memory_bytes=4 * 1024 ** 3)
+    calib = np.random.default_rng(0).integers(
+        0, cfgs[0].vocab_size, (64, SEQ)).astype(np.int32)
+    bench = MeasuredBench(cfgs, params, calib, segment_size=32)
+    result = AllocationOptimizer(cfgs, devices, bench, max_iter=1,
+                                 max_neighs=4, batch_sizes=(8, 16),
+                                 seq=SEQ).optimize()
+    print("allocation:\n" + result.matrix.pretty())
+
+    system = InferenceSystem(cfgs, params, result.matrix, segment_size=32,
+                             max_seq=SEQ, combine=args.combine)
+    httpd, batcher = serve(system, port=args.port, max_wait_s=0.05)
+    print(f"serving on http://127.0.0.1:{args.port}")
+
+    lat, lock = [], threading.Lock()
+
+    def client(i):
+        x = np.random.default_rng(i).integers(
+            0, cfgs[0].vocab_size, (4, SEQ)).tolist()
+        t0 = time.perf_counter()
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{args.port}/predict",
+            data=json.dumps({"tokens": x}).encode(),
+            headers={"Content-Type": "application/json"})
+        y = json.load(urllib.request.urlopen(req))["predictions"]
+        with lock:
+            lat.append(time.perf_counter() - t0)
+        assert len(y) == 4
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(args.requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(180)
+    wall = time.perf_counter() - t0
+    n = args.requests * 4
+    print(f"\n{args.requests} concurrent requests x4 samples: "
+          f"{n / wall:.1f} samples/s")
+    print(f"latency p50={np.percentile(lat, 50)*1000:.0f}ms "
+          f"p95={np.percentile(lat, 95)*1000:.0f}ms")
+    httpd.shutdown()
+    batcher.stop()
+    system.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""The paper's primary contribution: the allocation matrix, its optimizer
+(worst-fit-decreasing + bounded greedy), the bench backends, and the BBS
+baseline."""
+from repro.core.allocation import (DEFAULT_BATCH_SIZES, AllocationMatrix,
+                                   zeros)
+from repro.core.bbs import best_batch_strategy
+from repro.core.bench import AnalyticBench, MeasuredBench, MemoBench
+from repro.core.devices import DeviceSpec, host_cpus, simulated_gpus, tpu_cells
+from repro.core.greedy import bounded_greedy
+from repro.core.optimizer import AllocationOptimizer, OptimizationResult
+from repro.core.worst_fit import AllocationError, worst_fit_decreasing
+
+__all__ = [
+    "AllocationMatrix", "zeros", "DEFAULT_BATCH_SIZES", "DeviceSpec",
+    "host_cpus", "simulated_gpus", "tpu_cells", "AnalyticBench",
+    "MeasuredBench", "MemoBench", "worst_fit_decreasing", "AllocationError",
+    "bounded_greedy", "AllocationOptimizer", "OptimizationResult",
+    "best_batch_strategy",
+]

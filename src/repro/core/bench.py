@@ -1,0 +1,123 @@
+"""``bench(A, calib_data) -> throughput`` — the greedy's scoring function.
+
+Two backends (DESIGN.md §2/§7.1):
+
+* ``MeasuredBench`` — the paper's: instantiate the inference system in
+  Benchmark Mode on calibration samples and time it.  Used on this container
+  with reduced models; on real hardware it is the ground truth.
+* ``AnalyticBench`` — beyond-paper: a roofline cost model evaluated from the
+  configs and device specs.  Scores a matrix in microseconds instead of the
+  paper's ~40 s, letting the greedy visit far more neighbours.
+
+Both return samples/sec, and 0.0 for infeasible matrices (paper's convention).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import memory as mem
+from repro.core.allocation import AllocationMatrix
+
+Bench = Callable[[AllocationMatrix], float]
+
+
+class AnalyticBench:
+    """Roofline throughput model.
+
+    Worker latency per cycle: t = overhead + max(compute, memory) where
+      compute = batch * seq * flops_per_token / peak_flops
+      memory  = (params_bytes + batch * act_bytes) / mem_bw
+    Co-located workers time-share their device round-robin: a device's cycle
+    time is the sum of its workers' latencies, and a worker completes
+    ``batch`` samples per cycle.  A model's throughput adds over its
+    data-parallel instances; the ensemble's throughput is the min over models
+    (every member must predict every sample).
+    """
+
+    def __init__(self, cfgs: Sequence[ModelConfig], *, seq: int = 128,
+                 dtype_bytes: int = 4, overhead_s: float = 2e-4):
+        self.cfgs = list(cfgs)
+        self.seq = seq
+        self.dtype_bytes = dtype_bytes
+        self.overhead_s = overhead_s
+        self.calls = 0
+
+    def worker_time(self, dev, cfg: ModelConfig, batch: int) -> float:
+        flops = batch * self.seq * cfg.flops_per_token(self.seq)
+        act_per_tok = (2 * cfg.d_model + (cfg.d_ff or 2 * cfg.d_model)) * self.dtype_bytes
+        bytes_moved = (cfg.active_param_count() * self.dtype_bytes
+                       + batch * self.seq * act_per_tok)
+        return self.overhead_s + max(flops / dev.peak_flops,
+                                     bytes_moved / dev.mem_bw)
+
+    def __call__(self, alloc: AllocationMatrix) -> float:
+        self.calls += 1
+        if not alloc.is_valid():
+            return 0.0
+        if not mem.fit_mem(alloc, self.cfgs, self.seq, self.dtype_bytes):
+            return 0.0
+        cycle = [0.0] * len(alloc.devices)
+        for d, m, b in alloc.workers():
+            cycle[d] += self.worker_time(alloc.devices[d], self.cfgs[m], b)
+        per_model = [0.0] * len(alloc.model_names)
+        for d, m, b in alloc.workers():
+            per_model[m] += b / cycle[d]
+        return min(per_model)
+
+
+class MeasuredBench:
+    """The paper's offline benchmark: build the inference system for ``alloc``
+    in Benchmark Mode, push the calibration samples through, time it."""
+
+    def __init__(self, cfgs: Sequence[ModelConfig], params_list, calib_x,
+                 *, segment_size: int = 128, repeats: int = 1,
+                 frontends: Optional[dict] = None):
+        self.cfgs = list(cfgs)
+        self.params_list = params_list
+        self.calib_x = calib_x
+        self.segment_size = segment_size
+        self.repeats = repeats
+        self.frontends = frontends or {}
+        self.calls = 0
+
+    def __call__(self, alloc: AllocationMatrix) -> float:
+        from repro.serving.system import InferenceSystem   # lazy: no cycle
+        self.calls += 1
+        if not alloc.is_valid():
+            return 0.0
+        if not mem.fit_mem(alloc, self.cfgs, self.calib_x.shape[1]):
+            return 0.0
+        try:
+            system = InferenceSystem(self.cfgs, self.params_list, alloc,
+                                     segment_size=self.segment_size,
+                                     frontends=self.frontends)
+        except MemoryError:
+            return 0.0
+        try:
+            _, throughput = system.benchmark(self.calib_x, repeats=self.repeats)
+        finally:
+            system.shutdown()
+        return throughput
+
+
+class MemoBench:
+    """Memoizing wrapper (beyond-paper §7.5): identical matrices are scored
+    once.  The paper re-runs the 40 s benchmark on revisits."""
+
+    def __init__(self, inner: Bench):
+        self.inner = inner
+        self.cache: Dict[str, float] = {}
+        self.hits = 0
+
+    def __call__(self, alloc: AllocationMatrix) -> float:
+        k = alloc.key()
+        if k in self.cache:
+            self.hits += 1
+            return self.cache[k]
+        v = self.inner(alloc)
+        self.cache[k] = v
+        return v

@@ -1,0 +1,81 @@
+"""Device abstraction for the allocation problem.
+
+The paper's "device" is one GPU or CPU socket.  Our generalization (DESIGN.md
+§2): a device is an **allocation cell** — one chip, or a sub-mesh slice with
+model-parallel sharding inside.  ``jax_devices`` carries the backing runtime
+devices; on this CPU container every cell maps to the single CpuDevice while
+keeping distinct *logical* memory budgets, which is exactly what the
+allocation algorithms reason about.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+GiB = 1024 ** 3
+
+# TPU v5e chip constants (the deployment target; see ROOFLINE in the brief)
+TPU_V5E_PEAK_FLOPS = 197e12          # bf16
+TPU_V5E_HBM_BW = 819e9               # bytes/s
+TPU_V5E_HBM_BYTES = 16 * GiB
+TPU_V5E_LINK_BW = 50e9               # bytes/s per ICI link
+
+# Reference V100 / host constants for paper-shaped simulated clusters
+V100_PEAK_FLOPS = 125e12 / 8         # fp32 tensor-core derate for inference mix
+V100_HBM_BW = 900e9
+V100_HBM_BYTES = 32 * GiB
+HOST_PEAK_FLOPS = 1.5e12
+HOST_BW = 80e9
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    kind: str                        # "GPU" | "CPU" | "TPU"
+    memory_bytes: int
+    peak_flops: float
+    mem_bw: float
+    jax_devices: Tuple = ()          # backing jax.Device cell (may be empty = simulated)
+
+    @property
+    def is_accelerator(self) -> bool:
+        return self.kind in ("GPU", "TPU")
+
+    def key(self) -> str:
+        return f"{self.kind}:{self.name}:{self.memory_bytes}"
+
+
+def simulated_gpus(n: int, memory_bytes: int = V100_HBM_BYTES) -> list:
+    return [DeviceSpec(f"gpu{i}", "GPU", memory_bytes, V100_PEAK_FLOPS, V100_HBM_BW)
+            for i in range(n)]
+
+
+def simulated_tpus(n: int, memory_bytes: int = TPU_V5E_HBM_BYTES) -> list:
+    return [DeviceSpec(f"tpu{i}", "TPU", memory_bytes, TPU_V5E_PEAK_FLOPS,
+                       TPU_V5E_HBM_BW) for i in range(n)]
+
+
+def host_cpus(n: int = 1, memory_bytes: int = 16 * GiB) -> list:
+    """CPU devices; backed by the real CpuDevice when present."""
+    backing = tuple(d for d in jax.devices() if d.platform == "cpu")[:1]
+    return [DeviceSpec(f"cpu{i}", "CPU", memory_bytes, HOST_PEAK_FLOPS, HOST_BW,
+                       jax_devices=backing) for i in range(n)]
+
+
+def tpu_cells(mesh_devices: Sequence, cell_size: int, *,
+              memory_bytes: int = TPU_V5E_HBM_BYTES) -> list:
+    """Partition a flat device list into model-parallel cells of ``cell_size``
+    chips each — the beyond-paper 'cells' extension (DESIGN.md §7.2)."""
+    cells = []
+    flat = list(mesh_devices)
+    for i in range(0, len(flat) - cell_size + 1, cell_size):
+        group = tuple(flat[i:i + cell_size])
+        cells.append(DeviceSpec(
+            f"cell{i // cell_size}", "TPU",
+            memory_bytes * cell_size,
+            TPU_V5E_PEAK_FLOPS * cell_size,
+            TPU_V5E_HBM_BW * cell_size,
+            jax_devices=group))
+    return cells

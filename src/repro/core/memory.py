@@ -1,0 +1,55 @@
+"""Memory model: does an allocation matrix fit? (paper's ``fit_mem``).
+
+Per-worker footprint = params + activation workspace (batch-dependent) +
+decode KV/SSM cache (batch- and seq-dependent — our beyond-paper extension
+for stateful LLM serving, DESIGN.md §7.3).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.allocation import AllocationMatrix
+from repro.core.devices import DeviceSpec
+
+
+def worker_bytes(cfg: ModelConfig, batch: int, seq: int,
+                 dtype_bytes: int = 4, *, serving_cache_len: int = 0) -> int:
+    """Footprint of one worker (one model instance at one batch size)."""
+    params = cfg.param_count() * dtype_bytes
+    # activation workspace: residual + mixer + mlp peaks per layer (x2 for
+    # double-buffering); heads term covers attention q/k/v blocks
+    per_tok = (4 * cfg.d_model
+               + (cfg.d_ff if cfg.moe is None else
+                  cfg.moe.top_k * cfg.moe.d_ff_expert +
+                  (cfg.moe.d_ff_shared if cfg.moe.shared_expert else 0))
+               + 2 * cfg.num_heads * cfg.hd
+               + (2 * cfg.d_inner if cfg.ssm else 0))
+    acts = 2 * batch * seq * per_tok * dtype_bytes
+    logits = batch * cfg.padded_vocab * dtype_bytes
+    cache = cfg.kv_cache_bytes(batch, serving_cache_len or seq, 2) \
+        if serving_cache_len else 0
+    return params + acts + logits + cache
+
+
+def device_usage(alloc: AllocationMatrix, cfgs: Sequence[ModelConfig],
+                 seq: int, dtype_bytes: int = 4) -> List[int]:
+    """Bytes used per device under matrix ``alloc``."""
+    usage = [0] * len(alloc.devices)
+    for d, m, batch in alloc.workers():
+        usage[d] += worker_bytes(cfgs[m], batch, seq, dtype_bytes)
+    return usage
+
+
+def fit_mem(alloc: AllocationMatrix, cfgs: Sequence[ModelConfig], seq: int,
+            dtype_bytes: int = 4) -> bool:
+    """The paper's feasibility predicate."""
+    usage = device_usage(alloc, cfgs, seq, dtype_bytes)
+    return all(u <= dev.memory_bytes
+               for u, dev in zip(usage, alloc.devices))
+
+
+def remaining_memory(alloc: AllocationMatrix, cfgs: Sequence[ModelConfig],
+                     seq: int, dtype_bytes: int = 4) -> List[int]:
+    usage = device_usage(alloc, cfgs, seq, dtype_bytes)
+    return [dev.memory_bytes - u for u, dev in zip(usage, alloc.devices)]

@@ -1,0 +1,63 @@
+"""Algorithm 1 — Worst-Fit-Decreasing with priority to GPUs (paper §II.E.1).
+
+Models sorted by decreasing memory size; each is placed (at the minimum batch
+size) on the accelerator with the most remaining memory, falling back to the
+CPU side only when no accelerator fits, and erroring when nothing fits.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import memory as mem
+from repro.core.allocation import AllocationMatrix, zeros
+from repro.core.devices import DeviceSpec
+
+
+class AllocationError(RuntimeError):
+    """Paper line 24: no device has enough memory."""
+
+
+def _most_remaining(alloc: AllocationMatrix, cfgs, seq: int,
+                    accelerator: bool) -> int:
+    remaining = mem.remaining_memory(alloc, cfgs, seq)
+    best, best_rem = -1, -1
+    for d, dev in enumerate(alloc.devices):
+        if dev.is_accelerator != accelerator:
+            continue
+        if remaining[d] > best_rem:
+            best, best_rem = d, remaining[d]
+    return best
+
+
+def worst_fit_decreasing(cfgs: Sequence[ModelConfig],
+                         devices: List[DeviceSpec], *,
+                         default_batch_size: int = 8,
+                         seq: int = 128) -> AllocationMatrix:
+    """Returns an allocation with every model placed exactly once."""
+    names = [c.name for c in cfgs]
+    alloc = zeros(devices, names)
+    # sort models in descending order of memory size (offline heuristic)
+    order = sorted(range(len(cfgs)),
+                   key=lambda m: mem.worker_bytes(cfgs[m], default_batch_size, seq),
+                   reverse=True)
+    for m in order:
+        placed = False
+        for accelerator in (True, False):          # GPUs strictly first
+            d = _most_remaining(alloc, cfgs, seq, accelerator)
+            if d < 0:
+                continue
+            cand = alloc.copy()
+            cand.A[d, m] = default_batch_size
+            if mem.fit_mem(cand, cfgs, seq):
+                alloc = cand
+                placed = True
+                break
+        if not placed:
+            raise AllocationError(
+                f"no device has enough memory for {names[m]} "
+                f"(batch={default_batch_size})")
+    alloc.validate()
+    return alloc

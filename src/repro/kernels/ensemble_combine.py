@@ -1,0 +1,61 @@
+"""Pallas TPU kernel for the paper's combination rule (§II.C.2).
+
+The prediction accumulator's hot loop is ``Y[start(s):end(s)] += P_m / M`` for
+every worker message — a weighted segment accumulation.  On TPU we fuse the
+whole segment combine into one kernel: given the stacked member predictions
+``P (M, seg, C)`` and combination weights ``w (M,)`` (uniform 1/M for
+averaging, arbitrary for weighted averaging), produce ``Y (seg, C)``.
+
+Tiling: grid = (seg_blocks, c_blocks, M); the member dim is innermost and
+sequential, accumulating into a VMEM f32 scratch tile, so each (seg, C) output
+tile is written once — the memory-bound optimum (reads M·seg·C, writes seg·C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_SEG = 128
+BLOCK_C = 512
+
+
+def _kernel(p_ref, w_ref, y_ref, acc_ref, *, members: int):
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += p_ref[0].astype(jnp.float32) * w_ref[0].astype(jnp.float32)
+
+    @pl.when(mi == members - 1)
+    def _finalize():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def ensemble_combine(preds: jax.Array, weights: jax.Array, *,
+                     block_seg: int = BLOCK_SEG, block_c: int = BLOCK_C,
+                     interpret: bool = False) -> jax.Array:
+    """preds: (M, seg, C); weights: (M,).  Returns (seg, C) weighted sum."""
+    m, seg, c = preds.shape
+    block_seg = min(block_seg, seg)
+    block_c = min(block_c, c)
+    assert seg % block_seg == 0 and c % block_c == 0, (seg, c, block_seg, block_c)
+
+    kernel = functools.partial(_kernel, members=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(seg // block_seg, c // block_c, m),
+        in_specs=[
+            pl.BlockSpec((1, block_seg, block_c), lambda s_, c_, m_: (m_, s_, c_)),
+            pl.BlockSpec((1,), lambda s_, c_, m_: (m_,)),
+        ],
+        out_specs=pl.BlockSpec((block_seg, block_c), lambda s_, c_, m_: (s_, c_)),
+        out_shape=jax.ShapeDtypeStruct((seg, c), preds.dtype),
+        scratch_shapes=[pltpu.VMEM((block_seg, block_c), jnp.float32)],
+        interpret=interpret,
+    )(preds, weights)

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention: blocked causal GQA attention with optional
+sliding window.
+
+Tiling: grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the innermost
+grid dim is sequential on TPU, so the online-softmax running state (m, l, acc)
+lives in VMEM scratch and is carried across kv blocks.  Blocks are
+(BLOCK_Q, head_dim) / (BLOCK_KV, head_dim) — head_dim is padded to a multiple
+of 128 by the ops wrapper so the MXU contraction dims stay hardware-aligned.
+
+GQA is handled by the k/v index_map (query head h reads kv head h // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BLOCK_Q = 128
+BLOCK_KV = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_q: int, block_kv: int, seq: int, causal: bool, window: int,
+            scale: float, num_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos < seq                       # kv padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bkv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = BLOCK_Q, block_kv: int = BLOCK_KV,
+                    valid_len: int = 0, interpret: bool = False) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) — S and hd already padded by ops.py.
+
+    ``valid_len``: number of real (unpadded) kv positions (0 -> S).
+    Returns (B,S,H,hd).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0
+    nq, nk = s // block_q, s // block_kv
+    valid_len = valid_len or s
+    scale = 1.0  # applied by caller (ops.py) so padding doesn't change scale
+
+    # layout (B,H,S,hd) so blocks are 2D tiles in the (S,hd) plane
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_kv=block_kv, seq=valid_len,
+        causal=causal, window=window, scale=scale, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b_, h_, q_, k_: (b_, h_ // group, k_, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b_, h_, q_, k_: (b_, h_ // group, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max m
+            pltpu.VMEM((block_q,), jnp.float32),        # running denom l
+            pltpu.VMEM((block_q, hd), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,104 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pad head_dim to a multiple of 128 (MXU lane alignment) and seq to block
+    multiples, then slice results back;
+  * pre-apply the softmax scale on q so zero-padding of head_dim cannot
+    change results;
+  * select interpret mode automatically off-TPU (`pallas_enabled()` reports
+    whether the compiled TPU path is active).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import ensemble_combine as _comb
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+_FORCE_INTERPRET = None  # tests can monkeypatch via set_interpret()
+
+
+def set_interpret(value):
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = value
+
+
+def _interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def pallas_enabled() -> bool:
+    return not _interpret()
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd); scale 1/sqrt(hd)."""
+    s, hd = q.shape[1], q.shape[3]
+    q = q * (hd ** -0.5)
+    bq = min(_fa.BLOCK_Q, max(8, 1 << (s - 1).bit_length()))
+    bkv = min(_fa.BLOCK_KV, bq)
+    qp = _pad_to(_pad_to(q, 1, bq), 3, 128)
+    kp = _pad_to(_pad_to(k, 1, bkv), 3, 128)
+    vp = _pad_to(_pad_to(v, 1, bkv), 3, 128)
+    sp = max(qp.shape[1], kp.shape[1])
+    qp, kp, vp = (_pad_to(t, 1, sp) for t in (qp, kp, vp))
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              block_q=min(bq, sp), block_kv=min(bkv, sp),
+                              valid_len=s, interpret=_interpret())
+    return out[:, :s, :, :hd]
+
+
+@jax.jit
+def decode_attention(q, k, v, valid):
+    """q: (B,1,H,hd), k/v: (B,L,KV,hd), valid: (L,) bool -> (B,1,H,hd)."""
+    hd, L = q.shape[3], k.shape[1]
+    q = q * (hd ** -0.5)
+    bkv = min(_dec.BLOCK_KV, max(8, 1 << (L - 1).bit_length()))
+    qp = _pad_to(q, 3, 128)
+    kp = _pad_to(_pad_to(k, 1, bkv), 3, 128)
+    vp = _pad_to(_pad_to(v, 1, bkv), 3, 128)
+    validp = _pad_to(valid.astype(jnp.int32), 0, bkv)
+    out = _dec.decode_attention(qp, kp, vp, validp, block_kv=bkv,
+                                interpret=_interpret())
+    return out[:, :, :, :hd]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, bmat, cmat, *, chunk: int = 64):
+    """x: (B,S,H,P), dt: (B,S,H), A: (H,), bmat/cmat: (B,S,N) -> (B,S,H,P)."""
+    s = x.shape[1]
+    xp = _pad_to(x, 1, chunk)
+    dtp = _pad_to(dt, 1, chunk)
+    bp = _pad_to(bmat, 1, chunk)
+    cp = _pad_to(cmat, 1, chunk)
+    out = _ssd.ssd_scan(xp, dtp, A, bp, cp, chunk=chunk, interpret=_interpret())
+    return out[:, :s]
+
+
+@jax.jit
+def ensemble_combine(preds, weights):
+    """preds: (M, seg, C), weights: (M,) -> (seg, C)."""
+    seg, c = preds.shape[1], preds.shape[2]
+    bs = min(_comb.BLOCK_SEG, max(8, 1 << (seg - 1).bit_length()))
+    bc = min(_comb.BLOCK_C, max(8, 1 << (c - 1).bit_length()))
+    pp = _pad_to(_pad_to(preds, 1, bs), 2, bc)
+    out = _comb.ensemble_combine(pp, weights, block_seg=bs, block_c=bc,
+                                 interpret=_interpret())
+    return out[:seg, :c]

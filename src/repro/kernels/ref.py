@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd).  Scale 1/sqrt(hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    logits = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bshk->bqhk", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (B,1,H,hd), k/v: (B,L,KV,hd), valid: (L,) bool -> (B,1,H,hd)."""
+    h, hd = q.shape[2], q.shape[3]
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    logits = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bshk->bqhk", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, bmat, cmat, *, chunk=64):
+    """The models.ssm chunked implementation is the oracle."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, bmat, cmat, chunk)
+
+
+def ssd_scan_sequential_ref(x, dt, A, bmat, cmat):
+    """Fully sequential SSM recurrence — the ground-truth of ground-truths."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp                       # (b,h,p), (b,h), (b,n), (b,n)
+        decay = jnp.exp(dtt * A[None, :])
+        hstate = hstate * decay[..., None, None] + \
+            jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, hstate)
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                                    bmat.swapaxes(0, 1), cmat.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)
+
+
+def ensemble_combine_ref(preds, weights):
+    """preds: (M, seg, C), weights: (M,) -> (seg, C)."""
+    return jnp.einsum("m,msc->sc", weights.astype(jnp.float32),
+                      preds.astype(jnp.float32)).astype(preds.dtype)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Tiling: grid = (batch, num_chunks); the chunk dim is the innermost sequential
+grid dim, so the inter-chunk SSM state (H, P, N) is carried in VMEM scratch
+(f32).  Each kernel invocation computes one chunk's dual form:
+
+    y_intra = (C B^T ∘ L) (dt x)        — attention-like, MXU matmuls
+    y_inter = C h_in * exp(cumsum dA)   — contribution of the carried state
+    h_out   = h_in * exp(sum dA) + B^T (dt decay x)
+
+For mamba2-1.3b a full state tile is 64*64*128*4B = 2 MiB and a chunk tile is
+~1 MiB — comfortably inside the ~16 MiB/core VMEM budget; chunk length 64
+keeps the L matrix (cl, cl) MXU-aligned when padded to 128 (done by ops.py
+only when cl < 8; default chunks are already aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, nheads: int,
+            hdim: int, dstate: int, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)               # (cl, H, P)
+    dt = dt_ref[0].astype(jnp.float32)             # (cl, H)
+    A = a_ref[...].astype(jnp.float32)             # (H,)
+    bm = b_ref[0].astype(jnp.float32)              # (cl, N)
+    cm = c_ref[0].astype(jnp.float32)              # (cl, N)
+
+    dA = dt * A[None, :]                           # (cl, H)
+    cs = jnp.cumsum(dA, axis=0)                    # (cl, H)
+    # intra-chunk: scores (cl, cl), decay L per head
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # (cl, cl)
+    diff = cs[:, None, :] - cs[None, :, :]         # (i, j, H)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)              # (i, j, H)
+    gated = scores[:, :, None] * L                                  # (i, j, H)
+    xdt = x * dt[:, :, None]                                        # (j, H, P)
+    y_intra = jnp.einsum("ijh,jhp->ihp", gated, xdt)
+    # inter-chunk: apply carried state
+    h_in = h_ref[...]                                               # (H, P, N)
+    y_inter = jnp.einsum("in,hpn->ihp", cm, h_in) * jnp.exp(cs)[:, :, None]
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+    # state update
+    decay_to_end = jnp.exp(cs[-1:, :] - cs)                         # (j, H)
+    new_state = jnp.einsum("jn,jhp->hpn", bm, xdt * decay_to_end[:, :, None])
+    h_ref[...] = h_in * jnp.exp(cs[-1])[:, None, None] + new_state
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, *, chunk: int = 64,
+             interpret: bool = False) -> jax.Array:
+    """x: (B,S,H,P) f32, dt: (B,S,H) post-softplus, A: (H,) negative,
+    bmat/cmat: (B,S,N).  S must be a multiple of ``chunk`` (ops.py pads).
+    Returns y: (B,S,H,P) f32."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+
+    kernel = functools.partial(_kernel, nheads=h, hdim=p, dstate=n, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda b_, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda b_, c_: (b_, c_, 0)),
+            pl.BlockSpec((h,), lambda b_, c_: (0,)),
+            pl.BlockSpec((1, chunk, n), lambda b_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, c_: (b_, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, h, p), lambda b_, c_: (b_, c_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, bmat, cmat)

@@ -1,0 +1,146 @@
+"""Parse collective traffic and op statistics out of (S)HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so the roofline's third
+term comes from summing the output-shard sizes of every collective op in the
+post-SPMD HLO (shapes there are already per-device shard shapes).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# e.g.  bf16[4,128,64]{2,1,0}  or  f32[]
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+# computation block headers, e.g. "%body.123 (arg: bf16[..]) -> (..) {"
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*\))?\s*->[^{]*\{",
+                      re.M)
+# while ops carry condition=%c, body=%b
+_WHILE_RE = re.compile(r"while\([^)]*\)\s*,?\s*condition=%?([\w.\-]+)\s*,"
+                       r"\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """computation name -> body text (brace matched from each header)."""
+    out: Dict[str, str] = {}
+    for m in _COMP_RE.finditer(hlo_text):
+        name = m.group(1)
+        i = hlo_text.index("{", m.start())
+        depth, j = 0, i
+        while j < len(hlo_text):
+            if hlo_text[j] == "{":
+                depth += 1
+            elif hlo_text[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        out[name] = hlo_text[i:j + 1]
+    return out
+
+
+def while_trip_counts(hlo_text: str) -> Dict[str, int]:
+    """body-computation name -> inferred trip count.
+
+    XLA while conditions compare the induction variable to a constant; the
+    largest integer constant in the condition computation is the trip count.
+    Used to correct collective totals for lax.scan layer stacks (the HLO
+    prints a while body once regardless of trip count).
+    """
+    comps = _split_computations(hlo_text)
+    trips: Dict[str, int] = {}
+    for m in _WHILE_RE.finditer(hlo_text):
+        cond, body = m.groups()
+        consts = [int(c) for c in _CONST_RE.findall(comps.get(cond, ""))]
+        if consts:
+            trips[body] = max(max(consts), 1)
+    return trips
+
+
+def collective_bytes(hlo_text: str, *, scale_while_bodies: bool = True
+                     ) -> Dict[str, int]:
+    """Per-collective-type bytes (output shard shapes) and op counts.
+
+    With ``scale_while_bodies`` the bytes of collectives living inside a
+    while body are multiplied by the loop's inferred trip count, so a
+    scanned layer stack reports full totals.
+    """
+    comps = _split_computations(hlo_text)
+    trips = while_trip_counts(hlo_text) if scale_while_bodies else {}
+    # nested whiles: propagate multipliers one level (outer * inner)
+    mult: Dict[str, int] = {}
+    for body, t in trips.items():
+        mult[body] = t
+    for body, t in list(mult.items()):
+        inner = comps.get(body, "")
+        for m in _WHILE_RE.finditer(inner):
+            _, inner_body = m.groups()
+            if inner_body in trips:
+                mult[inner_body] = trips[inner_body] * t
+
+    out: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+
+    def scan_block(text: str, factor: int):
+        for m in _OP_LINE.finditer(text):
+            shapes_str, op = m.groups()
+            if "-done(" in m.group(0):
+                continue
+            total = 0
+            if shapes_str.startswith("("):
+                for sm in _SHAPE_RE.finditer(shapes_str):
+                    total += shape_bytes(sm.group(0))
+            else:
+                total = shape_bytes(shapes_str)
+            out[op] += total * factor
+            counts[op] += 1
+
+    body_names = set(mult)
+    for name, text in comps.items():
+        scan_block(text, mult.get(name, 1))
+    # text outside known computations (rare) is ignored; ENTRY is in comps
+    if not comps:                               # fallback: flat scan
+        scan_block(hlo_text, 1)
+    return {"bytes": dict(out), "counts": dict(counts),
+            "total_bytes": sum(out.values()),
+            "while_trip_counts": {k: v for k, v in trips.items()}}
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> Dict[str, int]:
+    """Crude op-name histogram — used to spot remat recompute / fusion shape."""
+    ops = re.findall(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][\w\-]*)\(", hlo_text)
+    hist: Dict[str, int] = defaultdict(int)
+    for o in ops:
+        hist[o] += 1
+    return dict(sorted(hist.items(), key=lambda kv: -kv[1])[:top])

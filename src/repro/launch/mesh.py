@@ -1,0 +1,44 @@
+"""Production meshes.
+
+Single pod: (16, 16) over ("data", "model") — 256 TPU v5e chips.
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips, the "pod"
+axis crossing DCI between two pods.
+
+Functions (not module-level constants) so importing this module never touches
+jax device state — the dry-run must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh on whatever devices exist (tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """The mesh axes a global batch dim is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def batch_axis_size(mesh) -> int:
+    out = 1
+    for a in batch_axes(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,94 @@
+"""Pod-scale serving launcher: optimize an ensemble allocation over TPU cells
+and start the inference server.
+
+On real hardware, cells are sub-mesh slices (core.devices.tpu_cells); on this
+container the same code path runs with CPU-backed logical devices.
+
+    python -m repro.launch.serve --ensemble ENS4 --cells 2 --port 8600
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ensemble", default="ENS4")
+    ap.add_argument("--members", type=int, default=0)
+    ap.add_argument("--cells", type=int, default=2)
+    ap.add_argument("--cell-mem-gib", type=float, default=4.0)
+    ap.add_argument("--port", type=int, default=8600)
+    ap.add_argument("--segment-size", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--combine", default="mean")
+    ap.add_argument("--bench", default="measured", choices=("measured", "analytic"))
+    ap.add_argument("--duration", type=float, default=0.0,
+                    help="serve for N seconds then exit (0 = forever)")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+    import repro.models as M
+    from repro.configs import ensemble
+    from repro.core import (AllocationOptimizer, AnalyticBench, MeasuredBench,
+                            host_cpus, tpu_cells)
+    from repro.serving.server import serve
+    from repro.serving.system import InferenceSystem
+
+    cfgs = ensemble(args.ensemble)
+    if args.members:
+        cfgs = cfgs[: args.members]
+    rng = jax.random.PRNGKey(0)
+    params = [M.init_params(jax.random.fold_in(rng, i), c)
+              for i, c in enumerate(cfgs)]
+
+    tpus = [d for d in jax.devices() if d.platform == "tpu"]
+    if tpus:
+        devices = tpu_cells(tpus, cell_size=max(1, len(tpus) // args.cells))
+    else:
+        devices = host_cpus(args.cells,
+                            memory_bytes=int(args.cell_mem_gib * 1024 ** 3))
+
+    calib = np.random.default_rng(0).integers(
+        0, cfgs[0].vocab_size, (64, args.seq)).astype(np.int32)
+    if args.bench == "measured":
+        bench = MeasuredBench(cfgs, params, calib,
+                              segment_size=args.segment_size)
+        opt = AllocationOptimizer(cfgs, devices, bench, max_iter=1,
+                                  max_neighs=4, batch_sizes=(8, 16),
+                                  seq=args.seq,
+                                  cache_path=".repro_alloc_cache.json")
+    else:
+        bench = AnalyticBench(cfgs, seq=args.seq)
+        opt = AllocationOptimizer(cfgs, devices, bench, max_iter=10,
+                                  max_neighs=100, seq=args.seq,
+                                  cache_path=".repro_alloc_cache.json")
+    res = opt.optimize()
+    print("allocation matrix:\n" + res.matrix.pretty())
+    print(f"bench: A1={res.wfd_score:.1f} -> A2={res.final_score:.1f} "
+          f"samples/s{' (cached)' if res.from_cache else ''}")
+
+    system = InferenceSystem(cfgs, params, res.matrix,
+                             segment_size=args.segment_size,
+                             max_seq=args.seq, combine=args.combine)
+    httpd, batcher = serve(system, port=args.port)
+    print(f"serving {len(cfgs)} models / {len(system.workers)} workers on "
+          f"http://127.0.0.1:{args.port}  (POST /predict)")
+    try:
+        if args.duration:
+            time.sleep(args.duration)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        httpd.shutdown()
+        batcher.stop()
+        system.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,160 @@
+"""Lowerable step functions + ShapeDtypeStruct input specs for the dry-run.
+
+Three step kinds, chosen by the input shape's ``kind``:
+  * train   — full AdamW train_step (remat'd scan over layers)
+  * prefill — prompt pass returning last-token logits + materialized cache
+  * decode  — ONE new token against a seq_len KV cache (serve_step)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES
+from repro.configs.base import ModelConfig
+from repro.models import cache as cache_mod
+from repro.models import decode_step as model_decode
+from repro.models import forward, prefill as model_prefill
+from repro.models.transformer import param_struct
+from repro.parallel import sharding as shd
+from repro.training import optimizer as opt
+from repro.training.train_loop import loss_fn
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape_name: str, *,
+                param_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """All step inputs for (cfg, shape) as ShapeDtypeStructs."""
+    sh = INPUT_SHAPES[shape_name]
+    b, s, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    specs: Dict[str, Any] = {"params": param_struct(cfg, param_dtype)}
+    if kind == "train":
+        specs["opt_state"] = opt_state_struct(specs["params"])
+        specs["batch"] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.frontend_tokens:
+            specs["batch"]["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.fdim), param_dtype)
+    elif kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.frontend_tokens:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.fdim), param_dtype)
+    elif kind == "decode":
+        from repro import runtime_flags
+        specs["cache"] = cache_mod.cache_struct(
+            cfg, b, s, param_dtype,
+            quantized=bool(runtime_flags.SHARDING_OPTS.get("kv_quant")))
+        specs["token"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        raise ValueError(kind)
+    return specs
+
+
+def opt_state_struct(params_struct) -> opt.AdamWState:
+    f32 = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return opt.AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                          f32(params_struct), f32(params_struct))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, *, remat: bool = True):
+    ocfg = opt.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def fwd(p):
+            return loss_fn(p, cfg, batch["tokens"], batch["labels"],
+                           batch.get("frontend"), remat=remat)
+        (loss, metrics), grads = jax.value_and_grad(fwd, has_aux=True)(params)
+        params, opt_state, om = opt.apply(ocfg, params, grads, opt_state)
+        return params, opt_state, dict(metrics, loss=loss, **om)
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, max_len: int):
+    if cfg.frontend_tokens:
+        def step(params, tokens, frontend):
+            return model_prefill(params, cfg, tokens, max_len, frontend)
+    else:
+        def step(params, tokens):
+            return model_prefill(params, cfg, tokens, max_len)
+    return step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def step(params, cache, token, pos):
+        return model_decode(params, cfg, cache, token, pos)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# sharded jit: the (arch x shape x mesh) lowering used by dryrun/roofline
+# ---------------------------------------------------------------------------
+def lower_step(cfg: ModelConfig, shape_name: str, mesh, *,
+               param_dtype=jnp.bfloat16, remat: bool = True):
+    """Returns (lowered, kind).  ``lowered.compile()`` is the dry-run proof."""
+    sh = INPUT_SHAPES[shape_name]
+    b, s, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    specs = input_specs(cfg, shape_name, param_dtype=param_dtype)
+    pshard = shd.param_shardings(cfg, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if kind == "train":
+        step = build_train_step(cfg, remat=remat)
+        oshard = opt.AdamWState(repl, pshard, pshard)
+        bshard = {
+            "tokens": NamedSharding(mesh, shd.batch_spec(mesh, b, 2)),
+            "labels": NamedSharding(mesh, shd.batch_spec(mesh, b, 2)),
+        }
+        if cfg.frontend_tokens:
+            bshard["frontend"] = NamedSharding(mesh, shd.batch_spec(mesh, b, 3))
+        metr = {k: repl for k in ("ce", "aux", "loss", "grad_norm", "lr")}
+        jfn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                      out_shardings=(pshard, oshard, metr))
+        with mesh:
+            lowered = jfn.lower(specs["params"], specs["opt_state"], specs["batch"])
+        return lowered, kind
+
+    if kind == "prefill":
+        step = build_prefill_step(cfg, max_len=s)
+        tshard = NamedSharding(mesh, shd.batch_spec(mesh, b, 2))
+        cshard = shd.to_named(shd.cache_specs(cfg, mesh, b, s), mesh)
+        lshard = NamedSharding(mesh, shd.batch_spec(mesh, b, 2))
+        args = [specs["params"], specs["tokens"]]
+        ins = [pshard, tshard]
+        if cfg.frontend_tokens:
+            args.append(specs["frontend"])
+            ins.append(NamedSharding(mesh, shd.batch_spec(mesh, b, 3)))
+        jfn = jax.jit(step, in_shardings=tuple(ins),
+                      out_shardings=(lshard, cshard))
+        with mesh:
+            lowered = jfn.lower(*args)
+        return lowered, kind
+
+    if kind == "decode":
+        step = build_decode_step(cfg)
+        cshard = shd.to_named(shd.cache_specs(cfg, mesh, b, s), mesh)
+        tokshard = NamedSharding(mesh, shd.batch_spec(mesh, b, 2))
+        lshard = NamedSharding(mesh, shd.batch_spec(mesh, b, 2))
+        jfn = jax.jit(step, in_shardings=(pshard, cshard, tokshard, repl),
+                      out_shardings=(lshard, cshard))
+        with mesh:
+            lowered = jfn.lower(specs["params"], specs["cache"],
+                                specs["token"], specs["pos"])
+        return lowered, kind
+
+    raise ValueError(kind)

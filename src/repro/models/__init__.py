@@ -1,0 +1,5 @@
+from repro.models.transformer import (Model, decode_step, forward, init_params,
+                                      prefill)
+from repro.models.cache import init_cache
+
+__all__ = ["Model", "forward", "prefill", "decode_step", "init_params", "init_cache"]

@@ -1,0 +1,49 @@
+"""Shared primitive layers: RMSNorm, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv        # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def embed(tokens: jax.Array, table: jax.Array, scale: bool) -> jax.Array:
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.sqrt(jnp.asarray(table.shape[1], x.dtype))
+    return x
+
+
+def unembed(x: jax.Array, table_or_head: jax.Array, tied: bool) -> jax.Array:
+    if tied:   # table: (V, D)
+        return jnp.einsum("...d,vd->...v", x, table_or_head)
+    return jnp.einsum("...d,dv->...v", x, table_or_head)

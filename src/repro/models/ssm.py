@@ -1,0 +1,194 @@
+"""Mamba2 mixer: chunked SSD (state-space duality) forward + O(1) decode step.
+
+Faithful to arXiv:2405.21060 (single B/C group): in_proj -> [z, x, B, C, dt],
+short causal depthwise conv over [x,B,C], softplus dt, scalar-per-head A,
+chunked dual computation (intra-chunk attention-like term + inter-chunk state
+recurrence), gated RMSNorm, out_proj.
+
+The pure-jnp chunked scan here is also the oracle for the Pallas ``ssd_scan``
+kernel (repro/kernels/ssd_scan.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm.d_state, cfg.ssm_heads
+    z, x, bmat, cmat, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  xbc: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def segsum_exp(dA_cs: jax.Array) -> jax.Array:
+    """L[..., i, j] = exp(cs_i - cs_j) for i >= j else 0.  dA_cs: (..., cl)."""
+    diff = dA_cs[..., :, None] - dA_cs[..., None, :]
+    cl = dA_cs.shape[-1]
+    mask = jnp.tril(jnp.ones((cl, cl), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, bmat, cmat, chunk: int):
+    """The SSD dual-form scan (pure jnp reference).
+
+    x: (B,S,H,P) float32, dt: (B,S,H) (post-softplus), A: (H,) negative,
+    bmat/cmat: (B,S,N).  Returns y: (B,S,H,P).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    dA = dtc * A                                        # (b,nc,cl,h)
+    cs = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+    # --- intra-chunk (attention-like) term
+    L = segsum_exp(cs.transpose(0, 1, 3, 2))            # (b,nc,h,cl,cl)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)      # (b,nc,cl,cl)
+    gated = scores[:, :, None] * L                      # (b,nc,h,cl,cl)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", gated, dtc, xc)
+    # --- per-chunk final states
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)       # (b,nc,cl,h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc,
+                        dtc * decay_to_end, xc)         # (b,nc,h,p,n)
+    # --- inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cs[:, :, -1, :])              # (b,nc,h)
+
+    def body(hprev, inp):
+        st, dec = inp                                   # (b,h,p,n), (b,h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), x.dtype)
+    from repro import runtime_flags
+    _, hprevs = jax.lax.scan(body, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+                             unroll=runtime_flags.scan_unroll())
+    hprevs = hprevs.swapaxes(0, 1)                      # (b,nc,h,p,n) state entering chunk
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", cc, hprevs) * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)
+    return y[:, :s]
+
+
+def ssd_final_state(x, dt, A, bmat, chunk: int):
+    """Final SSM state after a prefill — (B,H,P,N), for handing off to decode."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    dA = dtc * A
+    cs = jnp.cumsum(dA, axis=2)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, dtc * decay_to_end, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])
+
+    def body(hprev, inp):
+        st, dec = inp
+        return hprev * dec[..., None, None] + st, None
+
+    h0 = jnp.zeros((b, h, p, n), x.dtype)
+    from repro import runtime_flags
+    hfinal, _ = jax.lax.scan(body, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+                             unroll=runtime_flags.scan_unroll())
+    return hfinal
+
+
+def _gated_norm(y, z, w, eps):
+    y = y * jax.nn.silu(z)
+    dt = y.dtype
+    y = y.astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def ssm_mixer(cfg: ModelConfig, p, xin: jax.Array, *, use_kernel: bool = False,
+              return_state: bool = False):
+    """Full-sequence Mamba2 mixer.  xin: (B,S,D) -> (B,S,D) [, final_state]."""
+    s = cfg.ssm
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p["in_proj"])
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc_pre = jnp.concatenate([x, bmat, cmat], -1)       # pre-conv, for state handoff
+    xbc = _causal_conv(xbc_pre, p["conv_w"])
+    di, n = cfg.d_inner, s.d_state
+    x, bmat, cmat = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    bsz, slen = xin.shape[0], xin.shape[1]
+    x = x.reshape(bsz, slen, cfg.ssm_heads, s.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.ssd_scan(x, dt, A, bmat.astype(jnp.float32),
+                          cmat.astype(jnp.float32), chunk=s.chunk)
+    else:
+        y = ssd_chunked(x, dt, A, bmat.astype(jnp.float32),
+                        cmat.astype(jnp.float32), s.chunk)
+    y = y + x * p["D"][None, None, :, None]
+    y = y.reshape(bsz, slen, di).astype(xin.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        hfinal = ssd_final_state(x, dt, A, bmat.astype(jnp.float32), s.chunk)
+        k = s.d_conv
+        tail = xbc_pre[:, -(k - 1):]                     # (B, d_conv-1, C)
+        pad = (k - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, hfinal, tail
+    return out
+
+
+def ssm_decode_step(cfg: ModelConfig, p, xin: jax.Array, h_state: jax.Array,
+                    conv_state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token SSM step.
+
+    xin: (B,1,D); h_state: (B,H,P,N) float32; conv_state: (B, d_conv-1, C).
+    Returns (out (B,1,D), h_state', conv_state').
+    """
+    s = cfg.ssm
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p["in_proj"])
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([x, bmat, cmat], -1)[:, 0]            # (B,C)
+    window = jnp.concatenate([conv_state, xbc_new[:, None]], axis=1)  # (B,K,C)
+    conv_out = jax.nn.silu((window * p["conv_w"][None]).sum(axis=1))  # (B,C)
+    new_conv_state = window[:, 1:]
+    di, n = cfg.d_inner, s.d_state
+    xt = conv_out[:, :di].reshape(-1, cfg.ssm_heads, s.head_dim).astype(jnp.float32)
+    bt = conv_out[:, di:di + n].astype(jnp.float32)                 # (B,N)
+    ct = conv_out[:, di + n:].astype(jnp.float32)
+    dtt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dtt * A)                                        # (B,H)
+    h_state = h_state * decay[..., None, None] + \
+        jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+    y = jnp.einsum("bn,bhpn->bhp", ct, h_state)
+    y = y + xt * p["D"][None, :, None]
+    y = y.reshape(xin.shape[0], 1, di).astype(xin.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, h_state, new_conv_state

@@ -1,0 +1,203 @@
+"""Logical sharding rules: param/cache/batch pytrees -> PartitionSpec trees.
+
+Strategy (DESIGN.md §5): batch over ("pod","data"), width over "model".
+Every rule is a preference list of (dim, mesh-axis) candidates; the first
+candidate whose dimension size divides the axis size wins, otherwise the
+tensor is replicated — so every assigned architecture lowers on the
+production mesh regardless of head/expert divisibility quirks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+# name -> preference list of (dim, axis) in LAYER-LOCAL coords (no repeats dim)
+_PARAM_RULES: Dict[str, List[Tuple[int, str]]] = {
+    "embed":    [(0, "model")],
+    "head":     [(1, "model")],
+    "wq":       [(1, "model"), (2, "model")],
+    "wk":       [(1, "model"), (2, "model")],
+    "wv":       [(1, "model"), (2, "model")],
+    "wo":       [(0, "model"), (1, "model")],
+    # dense mlp
+    "w_gate":   [(1, "model")],          # (D,F) — overridden for MoE below
+    "w_up":     [(1, "model")],
+    "w_down":   [(0, "model")],
+    "ws_gate":  [(1, "model")],
+    "ws_up":    [(1, "model")],
+    "ws_down":  [(0, "model")],
+    # moe experts (E,D,F)/(E,F,D)
+    "w_gate_moe": [(0, "model"), (2, "model")],
+    "w_up_moe":   [(0, "model"), (2, "model")],
+    "w_down_moe": [(0, "model"), (1, "model")],
+    # ssm
+    "in_proj":  [(1, "model")],
+    "out_proj": [(0, "model")],
+}
+
+
+def _pick(shape: Sequence[int], prefs: List[Tuple[int, str]], mesh) -> P:
+    spec: List[Optional[str]] = [None] * len(shape)
+    for dim, axis in prefs:
+        if axis in mesh.axis_names and dim < len(shape) and \
+                shape[dim] % mesh.shape[axis] == 0:
+            spec[dim] = axis
+            return P(*spec)
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, shapes, mesh):
+    """PartitionSpec tree matching transformer.param_shapes(cfg)."""
+    moe = cfg.moe is not None
+
+    from repro import runtime_flags
+    repl_small = runtime_flags.SHARDING_OPTS.get("attn_replicate_small_heads")
+    fsdp = runtime_flags.SHARDING_OPTS.get("fsdp_params")
+
+    def _add_fsdp(spec: P, shape) -> P:
+        """§Perf variant "fsdp": additionally shard one free dim over "data"
+        (ZeRO-3 for params + optimizer state).  Without it a 100B-class MoE's
+        param+AdamW state is replicated across the data axis and overflows
+        HBM (llama4-scout: 67.4 GB/chip vs 16 GB — EXPERIMENTS.md §Perf)."""
+        if not fsdp or "data" not in mesh.axis_names or len(shape) < 2:
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        order = sorted(range(len(shape)), key=lambda d: -shape[d])
+        for dim in order:
+            if parts[dim] is None and shape[dim] % mesh.shape["data"] == 0:
+                parts[dim] = "data"
+                return P(*parts)
+        return spec
+
+    def leaf_spec(name: str, shape, stacked: bool) -> P:
+        key = name
+        if moe and name in ("w_gate", "w_up", "w_down") and stacked:
+            key = name + "_moe"
+        prefs = _PARAM_RULES.get(key, [])
+        if stacked:    # leading repeats dim is never sharded
+            prefs = [(d + 1, a) for d, a in prefs]
+        if repl_small and name in ("wq", "wk", "wv", "wo") and prefs:
+            # §Perf variant: when the head-count dim doesn't divide the model
+            # axis, replicate the (tiny) attention projections rather than
+            # shard head_dim — kills the per-chunk psum in attention.
+            head_dim_idx, axis = prefs[0]
+            if shape[head_dim_idx] % mesh.shape[axis] != 0:
+                return _add_fsdp(P(*([None] * len(shape))), shape)
+        return _add_fsdp(_pick(shape, prefs, mesh), shape)
+
+    out = {}
+    for name, node in shapes.items():
+        if name == "layers":
+            out["layers"] = [
+                {k: leaf_spec(k, v, True) for k, v in unit.items()}
+                for unit in node
+            ]
+        else:
+            out[name] = leaf_spec(name, node, False)
+    return out
+
+
+def param_shardings(cfg: ModelConfig, mesh):
+    from repro.models.transformer import param_shapes
+    shapes = param_shapes(cfg)
+    specs = param_specs(cfg, shapes, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh, global_batch: int, ndim: int = 2, *,
+               seq_dim: Optional[int] = None, seq_len: int = 0) -> P:
+    """Shard the leading batch dim over ("pod","data") when divisible;
+    otherwise (long_500k, batch=1) shard the sequence dim over "data"."""
+    axes = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    spec: List = [None] * ndim
+    if global_batch % size == 0:
+        spec[0] = axes if len(axes) > 1 else axes[0]
+    elif seq_dim is not None and seq_len and "data" in mesh.axis_names and \
+            seq_len % mesh.shape["data"] == 0:
+        spec[seq_dim] = "data"
+    return P(*spec)
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    """PartitionSpec tree matching models.cache.cache_struct."""
+    from repro.models.cache import layer_cache_struct
+    axes = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in axes]))
+    b_ax = (axes if len(axes) > 1 else axes[0]) if batch % bsize == 0 else None
+    seq_ok = b_ax is None and "data" in mesh.axis_names
+
+    from repro import runtime_flags
+    seq_shard = runtime_flags.SHARDING_OPTS.get("decode_cache_seq")
+    repl_small = runtime_flags.SHARDING_OPTS.get("attn_replicate_small_heads")
+
+    def kv_spec(shape):   # (R,B,L,KV,hd)
+        spec = [None, b_ax, None, None, None]
+        if seq_ok and shape[2] % mesh.shape["data"] == 0:
+            spec[2] = "data"
+        if seq_shard and shape[2] % mesh.shape["model"] == 0:
+            # §Perf variant: flash-decoding layout — each chip owns an L/16
+            # slice of the cache; attention reads are local, softmax combines
+            # via tiny psums instead of all-gathering the cache.
+            if spec[2] == "data" and \
+                    shape[2] % (mesh.shape["data"] * mesh.shape["model"]) == 0:
+                spec[2] = ("data", "model")
+            else:
+                spec[2] = "model"
+            return P(*spec)
+        # KV heads over model; when heads don't divide and attn_repl is on,
+        # prefer a sequence-sharded cache (head_dim sharding would propagate
+        # back into q/k/v and reintroduce per-chunk psums), else head_dim.
+        if shape[3] % mesh.shape["model"] == 0:
+            spec[3] = "model"
+        elif repl_small:
+            if spec[2] is None and shape[2] % mesh.shape["model"] == 0:
+                spec[2] = "model"
+        elif shape[4] % mesh.shape["model"] == 0:
+            spec[4] = "model"
+        return P(*spec)
+
+    def ssm_h_spec(shape):  # (R,B,H,P,N)
+        spec = [None, b_ax, None, None, None]
+        if shape[2] % mesh.shape["model"] == 0:
+            spec[2] = "model"
+        elif shape[3] % mesh.shape["model"] == 0:
+            spec[3] = "model"
+        return P(*spec)
+
+    def conv_spec(shape):   # (R,B,K-1,C)
+        spec = [None, b_ax, None, None]
+        if shape[3] % mesh.shape["model"] == 0:
+            spec[3] = "model"
+        return P(*spec)
+
+    layers = []
+    for kind in cfg.pattern:
+        entry = {}
+        from repro import runtime_flags as _rf
+        struct = layer_cache_struct(
+            cfg, kind, batch, max_len,
+            quantized=bool(_rf.SHARDING_OPTS.get("kv_quant")))
+        for name, (shape, _) in struct.items():
+            full = (cfg.repeats,) + shape
+            if name in ("k", "v", "k_scale", "v_scale"):
+                entry[name] = kv_spec(full)
+            elif name == "h":
+                entry[name] = ssm_h_spec(full)
+            else:
+                entry[name] = conv_spec(full)
+        layers.append(entry)
+    return {"layers": layers}
+
+
+def to_named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

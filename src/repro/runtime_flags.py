@@ -1,0 +1,78 @@
+"""Process-wide lowering flags.
+
+UNROLL_SCANS: when True, every structural lax.scan (layer stack, chunked
+attention) is fully unrolled at trace time.  XLA's ``cost_analysis()`` counts
+a while-loop body exactly once regardless of trip count, so the dry-run /
+roofline lowers with unrolled scans to get truthful FLOP/byte totals; the
+deployable path keeps scans (compact HLO, fast compiles).
+"""
+UNROLL_SCANS = False
+
+# Sharding-variant knobs for the perf hillclimb (EXPERIMENTS.md §Perf).
+# Set via set_variant(); consulted by parallel/sharding.py and models/moe.py.
+#   moe_constraints: mesh | None — explicit GShard expert-parallel sharding
+#       constraints inside the MoE dispatch/combine einsums.
+#   attn_replicate_small_heads: replicate attention projections when
+#       num_heads doesn't divide the model axis (instead of head_dim sharding).
+#   decode_cache_seq: shard decode KV caches along sequence (flash-decoding).
+SHARDING_OPTS = {
+    "moe_constraints": None,
+    "attn_replicate_small_heads": False,
+    "decode_cache_seq": False,
+    "seq_parallel": None,          # mesh -> shard activations' seq dim over
+                                   # "model" between layers (Megatron-SP)
+    "remat_policy": None,          # None = full remat; "dots" = save matmul
+                                   # outputs (skips recomputing dots + the
+                                   # collectives attached to them in bwd)
+    "fsdp_params": False,          # ZeRO-3: shard params + opt state over
+                                   # "data" too (see sharding._add_fsdp)
+    "kv_quant": False,             # int8 KV cache (decode shapes)
+}
+
+VARIANTS = {
+    "baseline": {},
+    "moe_ep": {"moe_constraints": "mesh"},          # mesh filled at lower time
+    "attn_repl": {"attn_replicate_small_heads": True},
+    "cache_seqshard": {"decode_cache_seq": "mesh"},
+    "seq_par": {"seq_parallel": "mesh"},
+    "attn_repl+seq_par": {"attn_replicate_small_heads": True,
+                          "seq_parallel": "mesh"},
+    "attn_repl+moe_ep": {"attn_replicate_small_heads": True,
+                         "moe_constraints": "mesh"},
+    "attn_repl+remat_dots": {"attn_replicate_small_heads": True,
+                             "remat_policy": "dots"},
+    "fsdp": {"fsdp_params": True},
+    "kv_int8": {"kv_quant": True},
+    "kv_int8+combined": {"kv_quant": True,
+                         "attn_replicate_small_heads": True},
+    "attn_repl+fsdp": {"attn_replicate_small_heads": True,
+                       "fsdp_params": True},
+    "attn_repl+fsdp+remat_dots": {"attn_replicate_small_heads": True,
+                                  "fsdp_params": True,
+                                  "remat_policy": "dots"},
+    "combined": {"moe_constraints": "mesh",
+                 "attn_replicate_small_heads": True,
+                 "decode_cache_seq": "mesh"},
+}
+
+
+def set_variant(name: str, mesh=None) -> None:
+    opts = dict(VARIANTS[name])
+    for k in ("moe_constraints", "seq_parallel", "decode_cache_seq"):
+        if opts.get(k) == "mesh":
+            opts[k] = mesh
+    base = {"moe_constraints": None, "attn_replicate_small_heads": False,
+            "decode_cache_seq": False, "seq_parallel": None,
+            "remat_policy": None, "fsdp_params": False, "kv_quant": False}
+    base.update(opts)
+    SHARDING_OPTS.clear()
+    SHARDING_OPTS.update(base)
+
+
+def scan_unroll() -> bool:
+    return UNROLL_SCANS
+
+
+def set_unroll(value: bool) -> None:
+    global UNROLL_SCANS
+    UNROLL_SCANS = bool(value)

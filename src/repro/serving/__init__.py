@@ -1,0 +1,11 @@
+"""The asynchronous inference system (paper §II): segment broadcaster,
+worker pool, prediction accumulator, HTTP wrapper."""
+from repro.serving.accumulator import PredictionAccumulator
+from repro.serving.segments import DEFAULT_SEGMENT_SIZE, Message
+from repro.serving.server import AdaptiveBatcher, serve
+from repro.serving.system import InferenceSystem
+from repro.serving.worker import Worker, make_predict_fn
+
+__all__ = ["InferenceSystem", "Worker", "make_predict_fn", "Message",
+           "PredictionAccumulator", "AdaptiveBatcher", "serve",
+           "DEFAULT_SEGMENT_SIZE"]

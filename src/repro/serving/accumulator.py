@@ -1,0 +1,134 @@
+"""The prediction accumulator (paper §II.C.2).
+
+Consumes {s, m, P} messages and folds them into the ensemble prediction:
+``Y[start(s):end(s)] += P / M`` for averaging — or, with
+``combine="pallas"``, buffers a segment's M member predictions and fuses the
+weighted combine in the ensemble_combine Pallas kernel (DESIGN.md §7.4).
+Other rules: "weighted" (per-member weights), "vote" (majority voting on
+argmax).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving import segments as seg
+from repro.serving.segments import Message
+
+
+class PredictionAccumulator:
+    def __init__(self, prediction_queue: "queue.Queue[Message]",
+                 num_models: int, *, combine: str = "mean",
+                 weights: Optional[np.ndarray] = None):
+        self.q = prediction_queue
+        self.M = num_models
+        self.combine = combine
+        self.weights = (np.asarray(weights, np.float32) if weights is not None
+                        else np.full(num_models, 1.0 / num_models, np.float32))
+        if combine == "mean":
+            self.weights = np.full(num_models, 1.0 / num_models, np.float32)
+        self.ready_count = 0
+        self.oom = threading.Event()
+        self.all_ready = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        # per-request state
+        self.Y: Optional[np.ndarray] = None
+        self.segment_size = 0
+        self.nb_samples = 0
+        self._remaining = 0
+        self._seg_buffers: Dict[int, List[Optional[np.ndarray]]] = {}
+        self.done = threading.Event()
+
+    # ---- request lifecycle ----------------------------------------------------
+    def begin(self, nb_samples: int, num_classes: int, segment_size: int,
+              members=None):
+        """``members``: optional subset of model ids answering this request
+        (paper §I.B "ensemble selection"); weights renormalize over them."""
+        members = list(range(self.M)) if members is None else list(members)
+        self._members = members
+        wsum = float(self.weights[members].sum())
+        self._active_weights = {m: float(self.weights[m]) / max(wsum, 1e-12)
+                                for m in members}
+        self.Y = np.zeros((nb_samples, num_classes), np.float32)
+        self.nb_samples = nb_samples
+        self.segment_size = segment_size
+        self._remaining = seg.num_segments(nb_samples, segment_size) * len(members)
+        self._seg_buffers = {}
+        self.done.clear()
+        if self._remaining == 0:
+            self.done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self.done.wait(timeout):
+            raise TimeoutError("prediction accumulator timed out")
+        return self.Y
+
+    # ---- the accumulation loop -------------------------------------------------
+    def start(self):
+        self._thread = threading.Thread(target=self._run, name="accumulator",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self.q.put(None)
+        if self._thread:
+            self._thread.join(10.0)
+
+    def _run(self):
+        while True:
+            msg = self.q.get()
+            if msg is None:
+                return
+            if msg.s == seg.READY:
+                self.ready_count += 1
+                if self.ready_count >= self._expected_ready():
+                    self.all_ready.set()
+                continue
+            if msg.s == seg.OOM and msg.m is None:
+                self.oom.set()
+                self.done.set()
+                continue
+            self._accumulate(msg)
+
+    _expected_ready_count = None
+
+    def expect_ready(self, n: int):
+        self._expected_ready_count = n
+        if self.ready_count >= n:
+            self.all_ready.set()
+
+    def _expected_ready(self) -> int:
+        return self._expected_ready_count or 1
+
+    def _accumulate(self, msg: Message):
+        lo = seg.start(msg.s, self.segment_size)
+        hi = seg.end(msg.s, self.segment_size, self.nb_samples)
+        members = getattr(self, "_members", list(range(self.M)))
+        weights = getattr(self, "_active_weights",
+                          {m: float(self.weights[m]) for m in members})
+        if self.combine in ("mean", "weighted"):
+            # the paper's one-liner: Y[start:end] += P / M (weighted general form)
+            self.Y[lo:hi] += msg.P * weights[msg.m]
+        elif self.combine == "vote":
+            onehot = np.zeros_like(self.Y[lo:hi])
+            onehot[np.arange(hi - lo), msg.P.argmax(axis=1)] = 1.0 / len(members)
+            self.Y[lo:hi] += onehot
+        elif self.combine == "pallas":
+            buf = self._seg_buffers.setdefault(msg.s, {})
+            buf[msg.m] = msg.P
+            if len(buf) == len(members):
+                from repro.kernels import ops as kops
+                import jax.numpy as jnp
+                stacked = jnp.asarray(np.stack([buf[m] for m in members]))
+                w = jnp.asarray(np.array([weights[m] for m in members],
+                                         np.float32))
+                self.Y[lo:hi] = np.asarray(kops.ensemble_combine(stacked, w))
+                del self._seg_buffers[msg.s]
+        else:
+            raise ValueError(f"unknown combine rule {self.combine!r}")
+        self._remaining -= 1
+        if self._remaining == 0:
+            self.done.set()

@@ -1,0 +1,66 @@
+"""Request-level prediction cache (paper §I.B: "to improve performance under
+redundant requests, caching allows avoiding recomputing similar requests").
+
+Keyed by the content hash of each sample row; LRU-bounded.  Integrated by the
+HTTP layer: cached rows are answered immediately, only the misses travel
+through the inference system, and the merged result preserves row order.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+def row_key(row: np.ndarray) -> bytes:
+    return hashlib.blake2b(row.tobytes(), digest_size=16).digest() + \
+        str(row.shape).encode()
+
+
+class PredictionCache:
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self._store: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, X: np.ndarray) -> Tuple[List[Optional[np.ndarray]], List[int]]:
+        """Returns (per-row cached predictions or None, indices of misses)."""
+        out: List[Optional[np.ndarray]] = []
+        misses: List[int] = []
+        with self._lock:
+            for i, row in enumerate(X):
+                k = row_key(row)
+                hit = self._store.get(k)
+                if hit is not None:
+                    self._store.move_to_end(k)
+                    self.hits += 1
+                    out.append(hit)
+                else:
+                    self.misses += 1
+                    out.append(None)
+                    misses.append(i)
+        return out, misses
+
+    def insert(self, X: np.ndarray, Y: np.ndarray) -> None:
+        with self._lock:
+            for row, y in zip(X, Y):
+                self._store[row_key(row)] = np.asarray(y)
+                self._store.move_to_end(row_key(row))
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+
+    def predict_through(self, system, X: np.ndarray) -> np.ndarray:
+        """Serve X via the cache: only misses hit the inference system."""
+        cached, miss_idx = self.lookup(X)
+        if miss_idx:
+            missing = X[miss_idx]
+            Y_miss = system.predict(missing)
+            self.insert(missing, Y_miss)
+            for j, i in enumerate(miss_idx):
+                cached[i] = Y_miss[j]
+        return np.stack(cached, axis=0)

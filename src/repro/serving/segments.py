@@ -1,0 +1,43 @@
+"""Segment protocol (paper §II.C.1).
+
+Requests are split into fixed-size segments; only small integer segment ids
+flow through the FIFO queues while the sample bytes live in the shared X
+buffer.  Special ids: ``SHUTDOWN`` asks a worker to exit; workers emit
+``Message(OOM/READY, ...)`` sentinels to the prediction accumulator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+SHUTDOWN = -1          # segment-ids-queue sentinel: worker must exit
+OOM = -1               # prediction-queue sentinel: device out of memory
+READY = -2             # prediction-queue sentinel: worker initialized
+
+DEFAULT_SEGMENT_SIZE = 128      # paper §III: fixed to 128
+
+
+def num_segments(nb_samples: int, segment_size: int) -> int:
+    return (nb_samples + segment_size - 1) // segment_size
+
+
+def start(s: int, segment_size: int) -> int:
+    return s * segment_size
+
+
+def end(s: int, segment_size: int, nb_samples: int) -> int:
+    return min((s + 1) * segment_size, nb_samples)
+
+
+@dataclass
+class Message:
+    """The {s, m, P} triplet (paper §II.C.2).  Sentinels use P=None."""
+    s: int                       # segment id (or OOM / READY)
+    m: Optional[int]             # model id
+    P: Optional[np.ndarray]      # (end(s)-start(s), C) prediction matrix
+
+    @property
+    def is_sentinel(self) -> bool:
+        return self.s < 0

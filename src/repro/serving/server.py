@@ -1,0 +1,145 @@
+"""HTTP wrapper + adaptive batching (paper §II.A).
+
+A minimal REST layer over the inference system (stdlib only):
+  POST /predict   body: {"tokens": [[...], ...]}  -> {"predictions": [[...], ...]}
+  GET  /health    -> {"status": "ok", "workers": N}
+  GET  /allocation -> the allocation matrix
+
+Adaptive batching: requests are buffered until a full segment accumulates OR
+``max_wait_s`` elapses — "triggering prediction before the buffered batch is
+full to improve the latency" (paper §I.B).  Note the buffer granularity is
+the *segment* size, not any single DNN's batch size (paper §II.A).
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.system import InferenceSystem
+
+
+class _Pending:
+    def __init__(self, x: np.ndarray):
+        self.x = x
+        self.event = threading.Event()
+        self.result: Optional[np.ndarray] = None
+
+
+class AdaptiveBatcher:
+    """Buffers requests into segments; flushes on size or timeout."""
+
+    def __init__(self, system: InferenceSystem, *, max_wait_s: float = 0.05,
+                 cache=None):
+        self.system = system
+        self.max_wait_s = max_wait_s
+        self.cache = cache                  # optional PredictionCache
+        self.q: "queue.Queue[_Pending]" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def submit(self, x: np.ndarray, timeout: float = 120.0) -> np.ndarray:
+        p = _Pending(x)
+        self.q.put(p)
+        if not p.event.wait(timeout):
+            raise TimeoutError("request timed out")
+        return p.result
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(5.0)
+
+    def _run(self):
+        target = self.system.segment_size
+        while not self._stop.is_set():
+            batch: List[_Pending] = []
+            count = 0
+            deadline = None
+            while count < target:
+                timeout = None if deadline is None else max(0.0, deadline - time.monotonic())
+                try:
+                    p = self.q.get(timeout=0.05 if deadline is None else timeout)
+                except queue.Empty:
+                    if deadline is None:
+                        if self._stop.is_set():
+                            return
+                        continue
+                    break                       # adaptive flush on timeout
+                if deadline is None:
+                    deadline = time.monotonic() + self.max_wait_s
+                batch.append(p)
+                count += p.x.shape[0]
+            if not batch:
+                continue
+            X = np.concatenate([p.x for p in batch], axis=0)
+            try:
+                Y = (self.cache.predict_through(self.system, X)
+                     if self.cache is not None else self.system.predict(X))
+                off = 0
+                for p in batch:
+                    p.result = Y[off:off + p.x.shape[0]]
+                    off += p.x.shape[0]
+            except Exception:                   # surface errors to all waiters
+                for p in batch:
+                    p.result = None
+            for p in batch:
+                p.event.set()
+
+
+def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
+          *, max_wait_s: float = 0.05,
+          cache=None) -> Tuple[ThreadingHTTPServer, AdaptiveBatcher]:
+    """Start the HTTP server (returns immediately; server runs on a thread).
+    ``cache``: optional serving.request_cache.PredictionCache (paper §I.B)."""
+    batcher = AdaptiveBatcher(system, max_wait_s=max_wait_s, cache=cache)
+
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *a):              # quiet
+            pass
+
+        def _json(self, code: int, payload):
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            if self.path == "/health":
+                self._json(200, {"status": "ok",
+                                 "workers": len(system.workers),
+                                 "models": [c.name for c in system.cfgs]})
+            elif self.path == "/allocation":
+                self._json(200, {"models": system.alloc.model_names,
+                                 "A": system.alloc.A.tolist()})
+            else:
+                self._json(404, {"error": "not found"})
+
+        def do_POST(self):
+            if self.path != "/predict":
+                self._json(404, {"error": "not found"})
+                return
+            try:
+                length = int(self.headers.get("Content-Length", 0))
+                payload = json.loads(self.rfile.read(length))
+                x = np.asarray(payload["tokens"], np.int32)
+                if x.ndim != 2:
+                    raise ValueError("tokens must be 2-D (batch, seq)")
+                y = batcher.submit(x)
+                if y is None:
+                    self._json(500, {"error": "prediction failed"})
+                    return
+                self._json(200, {"predictions": y.tolist()})
+            except (KeyError, ValueError, json.JSONDecodeError) as e:
+                self._json(400, {"error": str(e)})
+
+    httpd = ThreadingHTTPServer((host, port), Handler)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    return httpd, batcher

@@ -1,0 +1,130 @@
+"""The inference system core (paper §II.C): ``f(X, A) -> {Y, S}``.
+
+"Deploy Mode": ``predict(X) -> Y`` serves requests.
+"Benchmark Mode": ``benchmark(X) -> (Y, S)`` measures the throughput S of
+allocation matrix A on calibration samples.
+
+Processes (threads here — DESIGN.md §2): the *segment ids broadcaster*, the
+*worker pool* and the *prediction accumulator*, wired by thread-safe FIFO
+queues; sample bytes live in the shared X buffer, only integer segment ids
+travel through queues.
+"""
+from __future__ import annotations
+
+import queue
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.allocation import AllocationMatrix
+from repro.serving import segments as seg
+from repro.serving.accumulator import PredictionAccumulator
+from repro.serving.segments import DEFAULT_SEGMENT_SIZE, SHUTDOWN, Message
+from repro.serving.worker import Worker
+
+
+class InferenceSystem:
+    def __init__(self, cfgs: Sequence[ModelConfig], params_list,
+                 alloc: AllocationMatrix, *,
+                 segment_size: int = DEFAULT_SEGMENT_SIZE,
+                 combine: str = "mean",
+                 weights: Optional[np.ndarray] = None,
+                 fake: bool = False,
+                 frontends: Optional[Dict[int, np.ndarray]] = None,
+                 max_seq: int = 128,
+                 use_kernel: bool = False,
+                 ready_timeout: float = 300.0):
+        alloc.validate()
+        self.cfgs = list(cfgs)
+        self.alloc = alloc
+        self.segment_size = segment_size
+        self.M = len(self.cfgs)
+        classes = {c.vocab_size for c in self.cfgs}
+        if len(classes) != 1:
+            raise ValueError(f"ensemble members disagree on class count: {classes}")
+        self.num_classes = classes.pop()
+
+        # shared memory X buffer (paper: the heavy bytes live here, readable
+        # by every worker; queues carry only segment ids)
+        self.shared_x = np.zeros((segment_size, max_seq), np.int32)
+
+        self.prediction_queue: "queue.Queue[Message]" = queue.Queue()
+        self.model_queues: List[queue.Queue] = [queue.Queue() for _ in self.cfgs]
+        self.accumulator = PredictionAccumulator(
+            self.prediction_queue, self.M, combine=combine, weights=weights)
+
+        self.workers: List[Worker] = []
+        frontends = frontends or {}
+        for d, m, batch in alloc.workers():
+            w = Worker(f"w{d}.{m}", self.cfgs[m], params_list[m],
+                       alloc.devices[d], batch,
+                       self.model_queues[m], self.prediction_queue, m,
+                       self.shared_x, segment_size, fake=fake,
+                       frontend=frontends.get(m), use_kernel=use_kernel)
+            self.workers.append(w)
+
+        self.accumulator.expect_ready(len(self.workers))
+        self.accumulator.start()
+        for w in self.workers:
+            w.start()
+        if not self.accumulator.all_ready.wait(ready_timeout):
+            raise TimeoutError("workers failed to initialize")
+        self._shutdown = False
+
+    # ---- the segment ids broadcaster -----------------------------------------
+    def _broadcast(self, X: np.ndarray, members=None):
+        n = X.shape[0]
+        if X.shape[0] > self.shared_x.shape[0] or X.shape[1] != self.shared_x.shape[1]:
+            self.shared_x = np.zeros((max(n, self.shared_x.shape[0]), X.shape[1]),
+                                     np.int32)
+            for w in self.workers:
+                w.shared_x = self.shared_x
+        self.shared_x[:n] = X
+        members = list(range(self.M)) if members is None else list(members)
+        self.accumulator.begin(n, self.num_classes, self.segment_size, members)
+        for s in range(seg.num_segments(n, self.segment_size)):
+            for m in members:
+                self.model_queues[m].put((s, n))
+
+    # ---- modes -----------------------------------------------------------------
+    def predict(self, X: np.ndarray, timeout: float = 600.0,
+                members=None) -> np.ndarray:
+        """Deploy Mode.  ``members``: optional model-id subset (paper §I.B
+        "ensemble selection" — e.g. a faster accuracy/speed trade-off)."""
+        self._broadcast(np.asarray(X, np.int32), members)
+        Y = self.accumulator.wait(timeout)
+        if self.accumulator.oom.is_set():
+            self.shutdown()
+            raise MemoryError("a worker reported OOM ({-1, None, None})")
+        return Y
+
+    def benchmark(self, X: np.ndarray, repeats: int = 1,
+                  timeout: float = 600.0):
+        """Benchmark Mode: returns (Y, throughput samples/sec)."""
+        X = np.asarray(X, np.int32)
+        Y = self.predict(X, timeout)          # warm the path once
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            self._broadcast(X)
+            Y = self.accumulator.wait(timeout)
+        dt = time.perf_counter() - t0
+        return Y, repeats * X.shape[0] / dt
+
+    def shutdown(self):
+        if self._shutdown:
+            return
+        self._shutdown = True
+        for m, q in enumerate(self.model_queues):
+            for _ in [w for w in self.workers if w.model_idx == m]:
+                q.put(SHUTDOWN)
+        for w in self.workers:
+            w.join()
+        self.accumulator.stop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

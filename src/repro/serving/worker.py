@@ -1,0 +1,148 @@
+"""A worker: one model instance pinned to one device at one batch size.
+
+Faithful to paper Fig. 2 — three asynchronous threads per worker:
+  * the *batcher* turns incoming segment ids into padded batches,
+  * the *predictor* owns the params on its device and runs the jitted step,
+  * the *prediction sender* reassembles batch outputs into segment
+    predictions and posts the {s, m, P} message.
+
+Hardware adaptation (DESIGN.md §2): the paper uses one OS process per worker
+(TF1 sessions hold the GIL); with JAX, XLA executions release the GIL and
+dispatch is asynchronous, so threads + per-worker queues give the same
+overlap without IPC serialization overhead.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.devices import DeviceSpec
+from repro.serving import segments as seg
+from repro.serving.segments import Message, SHUTDOWN
+
+
+def make_predict_fn(cfg: ModelConfig, use_kernel: bool = False) -> Callable:
+    """Classification-style serving fn: tokens (b,S) -> last-token class
+    scores (b, C) with C = the unpadded vocab (the paper's f(x)->y)."""
+    from repro.models import forward
+
+    def predict(params, tokens, frontend):
+        logits, _ = forward(params, cfg, tokens, frontend, use_kernel=use_kernel)
+        return logits[:, -1, :cfg.vocab_size]
+
+    return jax.jit(predict)
+
+
+class Worker:
+    def __init__(self, worker_id: str, cfg: ModelConfig, params,
+                 device: DeviceSpec, batch_size: int,
+                 input_queue: "queue.Queue[int]",
+                 prediction_queue: "queue.Queue[Message]",
+                 model_idx: int, shared_x: np.ndarray, segment_size: int,
+                 *, fake: bool = False, frontend: Optional[np.ndarray] = None,
+                 use_kernel: bool = False):
+        self.worker_id = worker_id
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.model_idx = model_idx
+        self.input_queue = input_queue
+        self.prediction_queue = prediction_queue
+        self.shared_x = shared_x
+        self.segment_size = segment_size
+        self.fake = fake
+        self.device = device
+        self.num_classes = cfg.vocab_size
+        self._batch_q: "queue.Queue" = queue.Queue(maxsize=4)
+        self._send_q: "queue.Queue" = queue.Queue(maxsize=8)
+        self._threads = []
+        self._jax_device = device.jax_devices[0] if device.jax_devices else None
+
+        try:
+            if self._jax_device is not None:
+                params = jax.device_put(params, self._jax_device)
+            self.params = params
+            self.frontend = None
+            if cfg.frontend_tokens:
+                fe = frontend if frontend is not None else np.zeros(
+                    (batch_size, cfg.frontend_tokens, cfg.fdim), np.float32)
+                self.frontend = jnp.asarray(fe)
+            self.predict_fn = make_predict_fn(cfg, use_kernel)
+            if not fake:   # warm-up compile so READY means actually servable
+                warm = jnp.zeros((batch_size, shared_x.shape[1]), jnp.int32)
+                np.asarray(self.predict_fn(self.params, warm, self.frontend))
+            self.prediction_queue.put(Message(seg.READY, model_idx, None))
+        except (MemoryError, RuntimeError, ValueError):
+            # paper §II.C.2: {-1, None, None} triggers system shutdown
+            self.prediction_queue.put(Message(seg.OOM, None, None))
+            raise
+
+    # ---- threads -------------------------------------------------------------
+    def start(self):
+        for fn, name in [(self._batcher, "batcher"), (self._predictor, "predictor"),
+                         (self._sender, "sender")]:
+            t = threading.Thread(target=fn, name=f"{self.worker_id}-{name}",
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def join(self, timeout: float = 30.0):
+        for t in self._threads:
+            t.join(timeout)
+
+    def _batcher(self):
+        while True:
+            item = self.input_queue.get()
+            if item == SHUTDOWN:
+                self._batch_q.put(None)
+                return
+            s, nb_samples = item              # (segment id, request size)
+            lo = seg.start(s, self.segment_size)
+            hi = seg.end(s, self.segment_size, nb_samples)
+            data = self.shared_x[lo:hi]
+            batches = []
+            for i in range(0, len(data), self.batch_size):
+                chunk = data[i:i + self.batch_size]
+                n = len(chunk)
+                if n < self.batch_size:        # pad to the compiled shape
+                    chunk = np.concatenate(
+                        [chunk, np.zeros((self.batch_size - n,) + chunk.shape[1:],
+                                         chunk.dtype)])
+                batches.append((chunk, n))
+            self._batch_q.put((s, hi - lo, batches))
+
+    def _predictor(self):
+        while True:
+            item = self._batch_q.get()
+            if item is None:
+                self._send_q.put(None)
+                return
+            s, total, batches = item
+            outs = []
+            for chunk, n in batches:
+                if self.fake:
+                    outs.append((np.zeros((self.batch_size, self.num_classes),
+                                          np.float32), n))
+                    continue
+                x = jnp.asarray(chunk)
+                if self._jax_device is not None:
+                    x = jax.device_put(x, self._jax_device)
+                y = self.predict_fn(self.params, x, self.frontend)
+                outs.append((y, n))            # async dispatch: no block here
+            self._send_q.put((s, total, outs))
+
+    def _sender(self):
+        while True:
+            item = self._send_q.get()
+            if item is None:
+                return
+            s, total, outs = item
+            parts = [np.asarray(y)[:n] for y, n in outs]   # sync point
+            P = np.concatenate(parts, axis=0)
+            assert P.shape[0] == total
+            self.prediction_queue.put(Message(s, self.model_idx, P))

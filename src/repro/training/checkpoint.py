@@ -1,0 +1,82 @@
+"""Checkpointing: pytree <-> npz with structure manifest (pure numpy/JSON).
+
+Layout: <dir>/step_<N>/arrays.npz + manifest.json; ``latest`` tracked by a
+top-level JSON.  Works for params and optimizer state alike (any pytree of
+arrays + scalars).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Tuple[list, Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out, treedef
+
+
+def save(directory: str, step: int, tree, *, keep: int = 3) -> str:
+    """Atomic save; prunes to the newest ``keep`` checkpoints."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp_step_{step}")
+    final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, _ = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"a{i}": arr for i, (_, arr) in enumerate(flat)})
+    json.dump({"keys": [k for k, _ in flat], "step": step},
+              open(os.path.join(tmp, "manifest.json"), "w"))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    json.dump({"latest": step}, open(os.path.join(directory, "LATEST.json"), "w"))
+    _prune(directory, keep)
+    return final
+
+
+def _prune(directory: str, keep: int):
+    steps = sorted(
+        (int(d.split("_")[1]) for d in os.listdir(directory)
+         if d.startswith("step_")), reverse=True)
+    for s in steps[keep:]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    path = os.path.join(directory, "LATEST.json")
+    if not os.path.exists(path):
+        return None
+    return json.load(open(path))["latest"]
+
+
+def restore(directory: str, like, step: Optional[int] = None):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    data = np.load(os.path.join(d, "arrays.npz"))
+    arrays = [data[f"a{i}"] for i in range(len(manifest["keys"]))]
+    flat_like, treedef = _flatten_with_paths(like)
+    keys_like = [k for k, _ in flat_like]
+    if keys_like != manifest["keys"]:
+        raise ValueError("checkpoint structure mismatch:\n"
+                         f"  ckpt: {manifest['keys'][:5]}...\n"
+                         f"  tmpl: {keys_like[:5]}...")
+    leaves_template = jax.tree_util.tree_leaves(like)
+    restored = [np.asarray(a, dtype=np.asarray(t).dtype)
+                for a, t in zip(arrays, leaves_template)]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), restored)

@@ -1,0 +1,100 @@
+"""Training step & loop: next-token cross-entropy, remat, grad-accumulation."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.training import optimizer as opt
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, frontend=None, *,
+            use_kernel: bool = False, remat: bool = False):
+    """Next-token CE; label -100 and vocab padding are masked."""
+    logits, aux = forward(params, cfg, tokens, frontend,
+                          use_kernel=use_kernel, remat=remat)
+    logits = logits.astype(jnp.float32)
+    vocab = cfg.vocab_size
+    pad = logits.shape[-1] - vocab
+    if pad:
+        neg = jnp.full((1, 1, pad), -1e30, jnp.float32)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((1, 1, vocab)), neg], axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig, *,
+                    use_kernel: bool = False, remat: bool = True,
+                    accum_steps: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``batch``: {"tokens": (B,S), "labels": (B,S)[, "frontend": (B,F,D)]}.
+    With accum_steps > 1 the batch's leading dim is split into microbatches
+    and gradients are averaged in a lax.scan (memory-bounded large batch).
+    """
+    def fwd(params, tokens, labels, frontend):
+        return loss_fn(params, cfg, tokens, labels, frontend,
+                       use_kernel=use_kernel, remat=remat)
+
+    grad_fn = jax.value_and_grad(fwd, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        frontend = batch.get("frontend")
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, tokens, labels, frontend)
+        else:
+            b = tokens.shape[0] // accum_steps
+
+            def micro(carry, idx):
+                gacc, lacc = carry
+                sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * b, b, 0)
+                fe = sl(frontend) if frontend is not None else None
+                (l, _), g = grad_fn(params, sl(tokens), sl(labels), fe)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0),
+                                           jnp.arange(accum_steps))
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+            metrics = {"ce": loss, "aux": jnp.float32(0.0)}
+        params, opt_state, om = opt.apply(ocfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, params, data: Iterator[Dict[str, Any]],
+          ocfg: Optional[opt.AdamWConfig] = None, *, steps: int = 100,
+          log_every: int = 10, use_kernel: bool = False, remat: bool = True,
+          accum_steps: int = 1, callback: Optional[Callable] = None):
+    """Simple single-host loop (examples / tests).  Returns (params, history)."""
+    ocfg = ocfg or opt.AdamWConfig(total_steps=steps)
+    state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, use_kernel=use_kernel,
+                                      remat=remat, accum_steps=accum_steps))
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = next(data)
+        params, state, metrics = step_fn(params, state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(m)
+    return params, history

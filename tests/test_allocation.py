@@ -1,0 +1,147 @@
+"""Unit tests for the paper's core: allocation matrix, Algorithm 1, Algorithm
+2, Eq. 1/2, BBS baseline, optimizer cache."""
+import numpy as np
+import pytest
+
+from repro.configs import ensemble
+from repro.core import (AllocationMatrix, AllocationOptimizer, AnalyticBench,
+                        MemoBench, best_batch_strategy, bounded_greedy,
+                        host_cpus, simulated_gpus, worst_fit_decreasing, zeros)
+from repro.core.allocation import DEFAULT_BATCH_SIZES
+from repro.core.bbs import BBSError, analytic_single_bench
+from repro.core.worst_fit import AllocationError
+from repro.core import memory as mem
+
+GiB = 1024 ** 3
+
+
+@pytest.fixture
+def ens4():
+    return ensemble("ENS4")
+
+
+def test_matrix_validity(ens4):
+    devs = simulated_gpus(3)
+    names = [c.name for c in ens4]
+    a = zeros(devs, names)
+    assert not a.is_valid()                  # all-zero columns illegal
+    a.A[:, :] = 8
+    assert a.is_valid()
+    a.A[:, 2] = 0
+    assert not a.is_valid()
+    a.A[0, 2] = 16
+    assert a.is_valid()
+    a.A[1, :] = 0                            # idle device row is legal
+    assert a.is_valid()
+
+
+def test_eq1_decision_space():
+    # paper example: 8 DNNs, 4 GPUs + 1 CPU, B=5 -> ~1.3e31
+    total = AllocationMatrix.total_matrices(D=5, M=8, B=5)
+    assert 1.2e31 < total < 1.4e31
+
+
+def test_eq2_neighborhood(ens4):
+    # paper example: total_neighs = (B+1)*(D*M) - F with 232..240 for D=5, M=8
+    devs = simulated_gpus(4) + host_cpus(1)
+    names = [f"m{i}" for i in range(8)]
+    a = zeros(devs, names)
+    a.A[0, :] = 8                            # every model once on gpu0
+    n = a.total_neighbors()
+    assert 232 <= n <= 240
+    # enumerated neighbours are all valid and differ in exactly one cell
+    for cand in a.neighbors(DEFAULT_BATCH_SIZES):
+        assert cand.is_valid()
+        assert (cand.A != a.A).sum() == 1
+
+
+def test_worst_fit_places_all(ens4):
+    devs = simulated_gpus(4, memory_bytes=2 * GiB) + host_cpus(1, 8 * GiB)
+    alloc = worst_fit_decreasing(ens4, devs)
+    alloc.validate()
+    assert alloc.num_workers() == 4
+    assert mem.fit_mem(alloc, ens4, 128)
+    # GPU priority: CPU unused while GPUs have room
+    assert alloc.A[-1].sum() == 0
+
+
+def test_worst_fit_colocates_when_fewer_devices(ens4):
+    devs = simulated_gpus(2, memory_bytes=4 * GiB)
+    alloc = worst_fit_decreasing(ens4, devs)
+    alloc.validate()
+    assert max(len(alloc.colocated(d)) for d in range(2)) >= 2
+
+
+def test_worst_fit_oom(ens4):
+    devs = simulated_gpus(1, memory_bytes=20 * 1024 ** 2)
+    with pytest.raises(AllocationError):
+        worst_fit_decreasing(ens4, devs)
+
+
+def test_worst_fit_spills_to_cpu(ens4):
+    devs = simulated_gpus(1, memory_bytes=70 * 1024 ** 2) + \
+        host_cpus(1, 16 * GiB)
+    alloc = worst_fit_decreasing(ens4, devs)
+    assert alloc.A[1].sum() > 0              # CPU used once GPU is full
+
+
+def test_greedy_improves_and_is_monotone(ens4):
+    devs = simulated_gpus(4, memory_bytes=2 * GiB) + host_cpus(1, 8 * GiB)
+    bench = MemoBench(AnalyticBench(ens4, seq=128))
+    start = worst_fit_decreasing(ens4, devs)
+    best, trace = bounded_greedy(start, bench, max_iter=10, max_neighs=60)
+    assert trace.scores == sorted(trace.scores)      # monotone improvement
+    assert bench(best) >= bench(start)               # never worse (paper)
+    assert best.is_valid()
+
+
+def test_greedy_max_iter_extension():
+    """paper §III: when D - M > max_iter, max_iter grows to D - M."""
+    cfgs = ensemble("ENS1")
+    devs = simulated_gpus(16, memory_bytes=2 * GiB)
+    bench = AnalyticBench(cfgs, seq=128)
+    start = worst_fit_decreasing(cfgs, devs)
+    best, trace = bounded_greedy(start, bench, max_iter=3, max_neighs=200)
+    # ENS1 on 16 GPUs: data-parallelism should spread well beyond 3 iterations
+    assert trace.iterations > 3
+    assert best.instances(0)
+
+
+def test_optimizer_cache_roundtrip(tmp_path, ens4):
+    devs = simulated_gpus(4, memory_bytes=2 * GiB)
+    bench = AnalyticBench(ens4, seq=128)
+    cache = str(tmp_path / "alloc_cache.json")
+    opt1 = AllocationOptimizer(ens4, devs, bench, max_iter=2, max_neighs=20,
+                               cache_path=cache)
+    r1 = opt1.optimize()
+    assert not r1.from_cache
+    opt2 = AllocationOptimizer(ens4, devs, bench, max_iter=2, max_neighs=20,
+                               cache_path=cache)
+    r2 = opt2.optimize()
+    assert r2.from_cache
+    assert np.array_equal(r1.matrix.A, r2.matrix.A)
+
+
+def test_bbs_requires_enough_devices(ens4):
+    with pytest.raises(BBSError):
+        best_batch_strategy(ens4, simulated_gpus(2),
+                            analytic_single_bench())
+
+
+def test_bbs_vs_optimizer(ens4):
+    """Our optimizer must beat or match BBS (paper Table III)."""
+    devs = simulated_gpus(4, memory_bytes=2 * GiB) + host_cpus(1, 8 * GiB)
+    bench = MemoBench(AnalyticBench(ens4, seq=128))
+    bbs_alloc, nbench = best_batch_strategy(ens4, devs,
+                                            analytic_single_bench(seq=128))
+    assert nbench == len(ens4) * len(DEFAULT_BATCH_SIZES)
+    opt = AllocationOptimizer(ens4, devs, bench, max_iter=10, max_neighs=100)
+    res = opt.optimize()
+    assert res.final_score >= bench(bbs_alloc)
+
+
+def test_memory_model_monotone(ens4):
+    c = ens4[0]
+    b8 = mem.worker_bytes(c, 8, 128)
+    b128 = mem.worker_bytes(c, 128, 128)
+    assert b128 > b8 > c.param_count() * 4

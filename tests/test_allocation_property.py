@@ -1,0 +1,89 @@
+"""Hypothesis property tests on the allocation-system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ensemble
+from repro.core import (AllocationMatrix, AnalyticBench, simulated_gpus,
+                        worst_fit_decreasing, zeros)
+from repro.core.allocation import DEFAULT_BATCH_SIZES
+from repro.core import memory as mem
+from repro.core.worst_fit import AllocationError
+
+GiB = 1024 ** 3
+ENS = ensemble("ENS4")
+BATCHES = (0,) + DEFAULT_BATCH_SIZES
+
+
+@st.composite
+def matrices(draw, max_d=5, models=4):
+    d = draw(st.integers(1, max_d))
+    a = np.array([[draw(st.sampled_from(BATCHES)) for _ in range(models)]
+                  for _ in range(d)])
+    return AllocationMatrix(simulated_gpus(d), [c.name for c in ENS[:models]], a)
+
+
+@given(matrices())
+@settings(max_examples=60, deadline=None)
+def test_neighbors_preserve_validity(alloc):
+    """Every enumerated neighbour of a valid matrix is valid and one-step."""
+    if not alloc.is_valid():
+        return
+    for n in alloc.neighbors(DEFAULT_BATCH_SIZES):
+        assert n.is_valid()
+        assert (n.A != alloc.A).sum() == 1
+
+
+@given(matrices())
+@settings(max_examples=60, deadline=None)
+def test_key_is_canonical(alloc):
+    """Equal matrices hash equal; single-cell edits change the key."""
+    same = AllocationMatrix(alloc.devices, alloc.model_names, alloc.A.copy())
+    assert alloc.key() == same.key()
+    edited = alloc.copy()
+    edited.A[0, 0] = 8 if edited.A[0, 0] != 8 else 16
+    assert edited.key() != alloc.key()
+
+
+@given(matrices())
+@settings(max_examples=40, deadline=None)
+def test_bench_zero_iff_invalid_or_oom(alloc):
+    """The bench returns 0 exactly for invalid/infeasible matrices, and a
+    positive throughput otherwise (paper's convention)."""
+    bench = AnalyticBench(ENS, seq=128)
+    score = bench(alloc)
+    feasible = alloc.is_valid() and mem.fit_mem(alloc, ENS, 128,
+                                                bench.dtype_bytes)
+    assert (score > 0) == feasible
+
+
+@given(st.integers(1, 8), st.integers(1, 60))
+@settings(max_examples=30, deadline=None)
+def test_worst_fit_feasible_or_error(n_gpus, mem_hundred_mib):
+    """Algorithm 1 either returns a feasible full placement or raises."""
+    devs = simulated_gpus(n_gpus, memory_bytes=mem_hundred_mib * 100 * 1024 ** 2)
+    try:
+        alloc = worst_fit_decreasing(ENS, devs)
+    except AllocationError:
+        return
+    assert alloc.is_valid()
+    assert mem.fit_mem(alloc, ENS, 128)
+    assert alloc.num_workers() == len(ENS)       # exactly one worker per model
+
+
+@given(st.integers(2, 10), st.integers(2, 12), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_eq1_grows_with_dims(d, m, b):
+    t = AllocationMatrix.total_matrices(d, m, b)
+    assert t > AllocationMatrix.total_matrices(d - 1, m, b)
+    assert t > AllocationMatrix.total_matrices(d, m - 1, b)
+
+
+@given(matrices())
+@settings(max_examples=40, deadline=None)
+def test_device_usage_additive(alloc):
+    """Memory usage decomposes as the sum over workers."""
+    usage = mem.device_usage(alloc, ENS, 128)
+    expect = [0] * len(alloc.devices)
+    for d, m, b in alloc.workers():
+        expect[d] += mem.worker_bytes(ENS[m], b, 128)
+    assert usage == expect

@@ -1,0 +1,69 @@
+"""Small-mesh dry-run integration tests (subprocess: needs its own
+XLA_FLAGS device count before jax init).
+
+The production 256/512-chip sweep runs via ``python -m repro.launch.dryrun``;
+here every architecture lowers + compiles its train AND decode steps on an
+8-device (2 data x 4 model) mesh with full-config sharding rules applied to
+reduced variants — catching sharding-spec bugs quickly.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import list_architectures
+
+ROOT = __file__.rsplit("/tests", 1)[0]
+
+
+def _run(code: str, timeout=600):
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, cwd=ROOT,
+                         timeout=timeout)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+@pytest.mark.parametrize("arch", list_architectures())
+def test_small_mesh_lowering(arch):
+    code = f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, json
+        import dataclasses
+        from repro.configs import get_config
+        from repro.launch.steps import lower_step
+        import repro.configs as C
+
+        cfg = get_config("{arch}").reduced()
+        # register a temporary shape table sized for the reduced model
+        C.INPUT_SHAPES["tiny_train"] = dict(seq_len=64, global_batch=4, kind="train")
+        C.INPUT_SHAPES["tiny_decode"] = dict(seq_len=64, global_batch=4, kind="decode")
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        for shape in ("tiny_train", "tiny_decode"):
+            lowered, kind = lower_step(cfg, shape, mesh)
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis()
+            assert ca.get("flops", 0) > 0, (shape, "no flops")
+        print("OK {arch}")
+    """
+    assert f"OK {arch}" in _run(code)
+
+
+def test_production_mesh_shapes():
+    code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import sys; sys.path.insert(0, "src")
+        from repro.launch.mesh import make_production_mesh, batch_axes
+        m1 = make_production_mesh()
+        assert m1.axis_names == ("data", "model") and m1.devices.size == 256
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.axis_names == ("pod", "data", "model") and m2.devices.size == 512
+        assert batch_axes(m2) == ("pod", "data")
+        print("OK mesh")
+    """
+    assert "OK mesh" in _run(code)

@@ -1,0 +1,37 @@
+"""Examples stay runnable: compile-check all, execute the fastest end-to-end."""
+import os
+import py_compile
+import subprocess
+import sys
+
+import pytest
+
+ROOT = __file__.rsplit("/tests", 1)[0]
+EXAMPLES = ["quickstart.py", "serve_ensemble.py", "train_lm.py",
+            "allocation_search.py", "generate.py"]
+
+
+@pytest.mark.parametrize("name", EXAMPLES)
+def test_example_compiles(name):
+    py_compile.compile(os.path.join(ROOT, "examples", name), doraise=True)
+
+
+def test_allocation_search_runs():
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", "allocation_search.py"),
+         "--ensemble", "ENS4", "--gpus", "2", "--max-iter", "2",
+         "--max-neighs", "10"],
+        capture_output=True, text=True, timeout=300,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "Algorithm 2" in out.stdout
+
+
+def test_generate_runs():
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", "generate.py"),
+         "--arch", "musicgen-large", "--steps", "15", "--tokens", "8"],
+        capture_output=True, text=True, timeout=500,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "generated:" in out.stdout

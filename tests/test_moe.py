@@ -1,0 +1,84 @@
+"""MoE layer invariants: dense vs capacity equivalence, load-balance loss,
+routing properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.models.moe import load_balance_loss, moe_ffn, moe_ffn_dense
+import repro.models.transformer as T
+
+
+def _setup(impl="dense", capacity_factor=1.25, experts=4, top_k=2):
+    cfg = get_config("granite-moe-3b-a800m").reduced()
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, impl=impl, capacity_factor=capacity_factor,
+        num_experts=experts, top_k=top_k))
+    lp_shapes = T._layer_param_shapes(cfg, "attn")
+    rng = jax.random.PRNGKey(0)
+    lp = {}
+    for i, (k, s) in enumerate(lp_shapes.items()):
+        if k in ("router", "w_gate", "w_up", "w_down", "ws_gate", "ws_up",
+                 "ws_down"):
+            lp[k] = jax.random.normal(jax.random.fold_in(rng, i), s) * 0.05
+    return cfg, lp
+
+
+def test_capacity_matches_dense_when_ample():
+    """With capacity >= group size no tokens drop: the GShard dispatch must
+    equal the dense dropless computation exactly."""
+    cfg_d, lp = _setup(impl="dense")
+    cfg_c = dataclasses.replace(cfg_d, moe=dataclasses.replace(
+        cfg_d.moe, impl="capacity", capacity_factor=float(cfg_d.moe.num_experts)))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 24, cfg_d.d_model))
+    out_d, aux_d = moe_ffn(cfg_d, lp, x)
+    out_c, aux_c = moe_ffn(cfg_c, lp, x)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_c),
+                               atol=1e-5)
+    assert abs(float(aux_d) - float(aux_c)) < 1e-6
+
+
+def test_capacity_drops_reduce_output_norm():
+    """Tight capacity drops tokens — outputs must differ from dense."""
+    cfg_d, lp = _setup(impl="dense")
+    cfg_tight = dataclasses.replace(cfg_d, moe=dataclasses.replace(
+        cfg_d.moe, impl="capacity", capacity_factor=0.25))
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 64, cfg_d.d_model))
+    out_d, _ = moe_ffn(cfg_d, lp, x)
+    out_t, _ = moe_ffn(cfg_tight, lp, x)
+    assert float(jnp.abs(out_d - out_t).max()) > 1e-4
+
+
+def test_load_balance_loss_bounds():
+    """Uniform routing -> loss ~= 1; collapsed routing -> loss ~= E."""
+    E, T_, k = 8, 1024, 2
+    rng = np.random.default_rng(0)
+    probs_u = np.full((T_, E), 1.0 / E, np.float32)
+    idx_u = np.stack([rng.permutation(E)[:k] for _ in range(T_)])
+    l_u = float(load_balance_loss(jnp.asarray(probs_u), jnp.asarray(idx_u), E))
+    assert abs(l_u - k) < 0.2        # f sums to k with top-k counts
+
+    probs_c = np.zeros((T_, E), np.float32)
+    probs_c[:, 0] = 1.0
+    idx_c = np.zeros((T_, k), np.int64)
+    l_c = float(load_balance_loss(jnp.asarray(probs_c), jnp.asarray(idx_c), E))
+    assert l_c > l_u * 2             # collapse penalized
+
+
+def test_topk_weights_normalized():
+    from repro.models.moe import _router
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    w = jax.random.normal(jax.random.PRNGKey(2), (16, 8)) * 0.1
+    weights, idx, probs = _router(x, w, 3)
+    np.testing.assert_allclose(np.asarray(weights.sum(-1)), 1.0, atol=1e-5)
+    assert idx.shape == (32, 3)
+    assert int(idx.max()) < 8
+
+
+def test_shared_expert_always_on():
+    cfg = get_config("llama4-scout-17b-a16e").reduced()
+    assert cfg.moe.shared_expert
+    assert cfg.moe.top_k == 1

@@ -1,0 +1,89 @@
+"""HTTP wrapper + adaptive batching tests."""
+import json
+import threading
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+import repro.models as M
+from repro.configs import ensemble
+from repro.core import AllocationMatrix, host_cpus
+from repro.serving.server import serve
+from repro.serving.system import InferenceSystem
+
+PORT = 8691
+SEQ = 16
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfgs = ensemble("ENS4")[:1]
+    params = [M.init_params(jax.random.PRNGKey(0), cfgs[0])]
+    devs = host_cpus(1, memory_bytes=8 * 1024 ** 3)
+    alloc = AllocationMatrix(devs, [cfgs[0].name], np.array([[8]]))
+    system = InferenceSystem(cfgs, params, alloc, segment_size=16, max_seq=SEQ)
+    httpd, batcher = serve(system, port=PORT, max_wait_s=0.02)
+    yield system
+    httpd.shutdown()
+    batcher.stop()
+    system.shutdown()
+
+
+def _get(path):
+    return json.load(urllib.request.urlopen(f"http://127.0.0.1:{PORT}{path}"))
+
+
+def _post(path, payload):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{PORT}{path}", data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"})
+    return json.load(urllib.request.urlopen(req))
+
+
+def test_health(server):
+    r = _get("/health")
+    assert r["status"] == "ok" and r["workers"] == 1
+
+
+def test_allocation_endpoint(server):
+    r = _get("/allocation")
+    assert r["A"] == [[8]]
+
+
+def test_predict_roundtrip(server):
+    x = np.random.default_rng(0).integers(0, 512, (3, SEQ)).tolist()
+    r = _post("/predict", {"tokens": x})
+    y = np.asarray(r["predictions"])
+    assert y.shape == (3, 512)
+    assert np.isfinite(y).all()
+
+
+def test_bad_request(server):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{PORT}/predict", data=b'{"tokens": [1,2,3]}',
+        headers={"Content-Type": "application/json"})
+    try:
+        urllib.request.urlopen(req)
+        assert False, "should have errored"
+    except urllib.error.HTTPError as e:
+        assert e.code == 400
+
+
+def test_adaptive_batching_coalesces(server):
+    """Concurrent small requests are served within one segment flush."""
+    results = {}
+
+    def call(i):
+        x = np.random.default_rng(i).integers(0, 512, (2, SEQ)).tolist()
+        results[i] = np.asarray(_post("/predict", {"tokens": x})["predictions"])
+
+    threads = [threading.Thread(target=call, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert len(results) == 4
+    for y in results.values():
+        assert y.shape == (2, 512)

@@ -1,0 +1,146 @@
+"""End-to-end inference-system tests: ensemble prediction correctness vs the
+oracle, combination rules, co-localization/data-parallelism, the paper's
+sentinel protocol, and Benchmark Mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.models as M
+from repro.configs import ensemble, get_config
+from repro.core import AllocationMatrix, host_cpus
+from repro.serving.system import InferenceSystem
+from repro.serving import segments as seg
+
+SEQ = 16
+
+
+@pytest.fixture(scope="module")
+def ens2():
+    cfgs = ensemble("ENS4")[:2]
+    rng = jax.random.PRNGKey(0)
+    params = [M.init_params(jax.random.fold_in(rng, i), c)
+              for i, c in enumerate(cfgs)]
+    return cfgs, params
+
+
+def oracle(cfgs, params, X, weights=None):
+    w = weights if weights is not None else [1 / len(cfgs)] * len(cfgs)
+    out = np.zeros((X.shape[0], cfgs[0].vocab_size), np.float32)
+    for i, (c, p) in enumerate(zip(cfgs, params)):
+        fe = jnp.zeros((X.shape[0], c.frontend_tokens, c.fdim)) \
+            if c.frontend_tokens else None
+        lg, _ = M.forward(p, c, jnp.asarray(X), fe)
+        out += np.asarray(lg[:, -1, :c.vocab_size]) * w[i]
+    return out
+
+
+def make_system(cfgs, params, A, **kw):
+    devs = host_cpus(A.shape[0], memory_bytes=8 * 1024 ** 3)
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    return InferenceSystem(cfgs, params, alloc, max_seq=SEQ, **kw)
+
+
+def test_predict_matches_oracle(ens2):
+    cfgs, params = ens2
+    X = np.random.default_rng(0).integers(0, 512, (70, SEQ)).astype(np.int32)
+    with make_system(cfgs, params, np.array([[8, 16]]), segment_size=32) as s:
+        Y = s.predict(X)
+    np.testing.assert_allclose(Y, oracle(cfgs, params, X), atol=2e-5)
+
+
+def test_data_parallel_and_colocation(ens2):
+    """2 instances of model 0 (data-parallel) + co-location on device 0."""
+    cfgs, params = ens2
+    X = np.random.default_rng(1).integers(0, 512, (100, SEQ)).astype(np.int32)
+    A = np.array([[8, 8],
+                  [16, 0]])
+    with make_system(cfgs, params, A, segment_size=16) as s:
+        assert len(s.workers) == 3
+        Y = s.predict(X)
+    np.testing.assert_allclose(Y, oracle(cfgs, params, X), atol=2e-5)
+
+
+def test_weighted_and_vote_combine(ens2):
+    cfgs, params = ens2
+    X = np.random.default_rng(2).integers(0, 512, (20, SEQ)).astype(np.int32)
+    w = np.array([0.8, 0.2], np.float32)
+    with make_system(cfgs, params, np.array([[8, 8]]), combine="weighted",
+                     weights=w, segment_size=16) as s:
+        Y = s.predict(X)
+    np.testing.assert_allclose(Y, oracle(cfgs, params, X, w), atol=2e-5)
+
+    with make_system(cfgs, params, np.array([[8, 8]]), combine="vote",
+                     segment_size=16) as s:
+        Yv = s.predict(X)
+    # votes sum to 1 per row across classes
+    np.testing.assert_allclose(Yv.sum(axis=1), 1.0, atol=1e-6)
+
+
+def test_pallas_combine_matches_mean(ens2):
+    cfgs, params = ens2
+    X = np.random.default_rng(3).integers(0, 512, (40, SEQ)).astype(np.int32)
+    with make_system(cfgs, params, np.array([[8, 8]]), segment_size=16) as s:
+        Y1 = s.predict(X)
+    with make_system(cfgs, params, np.array([[8, 8]]), combine="pallas",
+                     segment_size=16) as s:
+        Y2 = s.predict(X)
+    np.testing.assert_allclose(Y1, Y2, atol=1e-5)
+
+
+def test_benchmark_mode_returns_throughput(ens2):
+    cfgs, params = ens2
+    X = np.random.default_rng(4).integers(0, 512, (64, SEQ)).astype(np.int32)
+    with make_system(cfgs, params, np.array([[8, 8]]), segment_size=32) as s:
+        Y, thr = s.benchmark(X)
+    assert thr > 0
+    assert Y.shape == (64, 512)
+
+
+def test_fake_mode_measures_overhead(ens2):
+    """§IV.A: fake predictors return zeros; the pipeline overhead is tiny."""
+    cfgs, params = ens2
+    X = np.random.default_rng(5).integers(0, 512, (256, SEQ)).astype(np.int32)
+    with make_system(cfgs, params, np.array([[8, 8]]), fake=True,
+                     segment_size=64) as s:
+        Y, thr = s.benchmark(X)
+    assert np.all(Y == 0)
+    assert thr > 1000            # >1k samples/s through the fake pipeline
+
+
+def test_ready_sentinel_protocol(ens2):
+    cfgs, params = ens2
+    with make_system(cfgs, params, np.array([[8, 8]]), segment_size=16) as s:
+        assert s.accumulator.ready_count == len(s.workers)
+        assert s.accumulator.all_ready.is_set()
+
+
+def test_mismatched_classes_rejected():
+    import dataclasses
+    cfgs = ensemble("ENS4")[:2]
+    cfgs = [cfgs[0], dataclasses.replace(cfgs[1], vocab_size=256)]
+    rng = jax.random.PRNGKey(0)
+    params = [M.init_params(jax.random.fold_in(rng, i), c)
+              for i, c in enumerate(cfgs)]
+    with pytest.raises(ValueError, match="class count"):
+        make_system(cfgs, params, np.array([[8, 8]]))
+
+
+def test_segment_math():
+    assert seg.num_segments(300, 128) == 3
+    assert seg.start(2, 128) == 256
+    assert seg.end(2, 128, 300) == 300       # the paper's 300-image example
+    assert seg.end(0, 128, 300) == 128
+
+
+def test_ensemble_selection_subset(ens2):
+    """paper §I.B "ensemble selection": the client picks a member subset."""
+    cfgs, params = ens2
+    X = np.random.default_rng(7).integers(0, 512, (20, SEQ)).astype(np.int32)
+    with make_system(cfgs, params, np.array([[8, 8]]), segment_size=16) as s:
+        y_all = s.predict(X)
+        y_m0 = s.predict(X, members=[0])
+        y_m1 = s.predict(X, members=[1])
+    np.testing.assert_allclose(y_m0, oracle(cfgs[:1], params[:1], X), atol=2e-5)
+    np.testing.assert_allclose(y_m1, oracle(cfgs[1:], params[1:], X), atol=2e-5)
+    np.testing.assert_allclose(0.5 * (y_m0 + y_m1), y_all, atol=2e-5)

@@ -1,0 +1,109 @@
+"""Sharding-rule invariants, for every architecture x variant, on abstract
+production meshes (no devices needed): every sharded dim divides its mesh
+axes, specs match tree structure, and variant behaviors hold."""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro import runtime_flags
+from repro.configs import INPUT_SHAPES, list_architectures, get_config
+from repro.models.transformer import param_shapes
+from repro.parallel import sharding as shd
+
+MESH1 = AbstractMesh((16, 16), ("data", "model"))
+MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_size(mesh, entry) -> int:
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _check_tree(shapes, specs, mesh):
+    flat_shapes = jax.tree.leaves(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for shape, spec in zip(flat_shapes, flat_specs):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            assert shape[dim] % _axis_size(mesh, entry) == 0, (shape, spec)
+
+
+@pytest.fixture(autouse=True)
+def _reset_variant():
+    yield
+    runtime_flags.set_variant("baseline")
+
+
+@pytest.mark.parametrize("arch", list_architectures())
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["1pod", "2pod"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    shapes = param_shapes(cfg)
+    for variant in ("baseline", "attn_repl", "fsdp", "attn_repl+fsdp"):
+        runtime_flags.set_variant(variant, mesh)
+        specs = shd.param_specs(cfg, shapes, mesh)
+        _check_tree(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", list_architectures())
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    from repro.models.cache import layer_cache_struct
+    for shape_name in ("decode_32k", "long_500k"):
+        sh = INPUT_SHAPES[shape_name]
+        b, s = sh["global_batch"], sh["seq_len"]
+        for variant in ("baseline", "cache_seqshard", "attn_repl", "kv_int8"):
+            runtime_flags.set_variant(variant, MESH1)
+            specs = shd.cache_specs(cfg, MESH1, b, s)
+            for kind, entry in zip(cfg.pattern, specs["layers"]):
+                struct = layer_cache_struct(
+                    cfg, kind, b, s,
+                    quantized=bool(runtime_flags.SHARDING_OPTS.get("kv_quant")))
+                for name, spec in entry.items():
+                    shape = (cfg.repeats,) + struct[name][0]
+                    for dim, ax in enumerate(spec):
+                        if ax is None:
+                            continue
+                        assert shape[dim] % _axis_size(MESH1, ax) == 0, \
+                            (arch, shape_name, variant, name, shape, spec)
+
+
+def test_attn_repl_replicates_small_heads():
+    cfg = get_config("gemma3-1b")          # 4 q / 1 kv heads, indivisible
+    shapes = param_shapes(cfg)
+    runtime_flags.set_variant("attn_repl", MESH1)
+    specs = shd.param_specs(cfg, shapes, MESH1)
+    unit = specs["layers"][0]
+    assert unit["wq"] == P(None, None, None, None)
+    assert unit["wk"] == P(None, None, None, None)
+    runtime_flags.set_variant("baseline")
+    specs_b = shd.param_specs(cfg, shapes, MESH1)
+    assert specs_b["layers"][0]["wq"] == P(None, None, None, "model")  # hd fallback
+
+
+def test_fsdp_adds_data_axis():
+    cfg = get_config("llama4-scout-17b-a16e")
+    shapes = param_shapes(cfg)
+    runtime_flags.set_variant("fsdp", MESH1)
+    specs = shd.param_specs(cfg, shapes, MESH1)
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    frac_data = sum("data" in [a for e in spec if e is not None
+                               for a in ((e,) if isinstance(e, str) else e)]
+                    for spec in flat) / len(flat)
+    assert frac_data > 0.5     # most tensors gain a data-sharded dim
+
+
+def test_batch_spec_long_context_falls_back_to_seq():
+    spec = shd.batch_spec(MESH1, 1, 2, seq_dim=1, seq_len=524288)
+    assert spec == P(None, "data")
+    spec2 = shd.batch_spec(MESH1, 256, 2)
+    assert spec2 == P("data", None)
+    spec3 = shd.batch_spec(MESH2, 256, 2)
+    assert spec3 == P(("pod", "data"), None)

@@ -1,0 +1,82 @@
+"""Mamba2 SSD invariants: chunked == sequential, chunk-size independence,
+decode step == full scan, hybrid block consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.ref import ssd_scan_sequential_ref
+from repro.models.ssm import ssd_chunked, ssd_final_state
+
+
+def _inputs(key, b=2, s=64, h=4, p=32, n=16):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[4], (b, s, n))
+    return x, dt, A, bm, cm
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+def test_chunk_size_invariance(chunk):
+    x, dt, A, bm, cm = _inputs(0)
+    y = ssd_chunked(x, dt, A, bm, cm, chunk)
+    y_ref = ssd_scan_sequential_ref(x, dt, A, bm, cm)
+    scale = float(jnp.abs(y_ref).max())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4 * scale, rtol=1e-4)
+
+
+def test_final_state_matches_sequential():
+    x, dt, A, bm, cm = _inputs(1)
+    hfin = ssd_final_state(x, dt, A, bm, chunk=16)
+    # sequential recurrence ground truth
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    hseq = np.zeros((b, h, p, n), np.float32)
+    xn, dtn, An, bn = map(np.asarray, (x, dt, A, bm))
+    for t in range(s):
+        decay = np.exp(dtn[:, t] * An[None, :])
+        hseq = hseq * decay[..., None, None] + \
+            np.einsum("bh,bn,bhp->bhpn", dtn[:, t], bn[:, t], xn[:, t])
+    np.testing.assert_allclose(np.asarray(hfin), hseq, atol=1e-3, rtol=1e-4)
+
+
+def test_mamba2_decode_long_run():
+    """SSM decode stays exact over many steps (state is O(1) in seq len)."""
+    import repro.models as M
+    cfg = get_config("mamba2-1.3b").reduced()
+    rng = jax.random.PRNGKey(3)
+    params = M.init_params(rng, cfg)
+    total = 48
+    tokens = jax.random.randint(rng, (1, total), 0, cfg.vocab_size)
+    logits_full, _ = M.forward(params, cfg, tokens)
+    lg, cache = M.prefill(params, cfg, tokens[:, :8], 8)
+    for t in range(8, total):
+        lg, cache = M.decode_step(params, cfg, cache, tokens[:, t:t + 1],
+                                  jnp.int32(t))
+        err = float(jnp.abs(lg - logits_full[:, t]).max())
+        assert err < 2e-3, (t, err)
+    # cache size independent of t: state tensors only
+    for entry in cache["layers"]:
+        assert set(entry) == {"h", "conv"}
+
+
+def test_hybrid_has_both_paths():
+    cfg = get_config("hymba-1.5b").reduced()
+    from repro.models.transformer import param_shapes
+    unit = param_shapes(cfg)["layers"][0]
+    assert "wq" in unit and "in_proj" in unit      # attention + mamba heads
+
+
+def test_ssm_numerical_stability_long_seq():
+    """Large dt*A decay must not produce NaN/inf over long sequences."""
+    x, dt, A, bm, cm = _inputs(2, s=256)
+    dt = dt * 5.0                                   # aggressive decay
+    y = ssd_chunked(x, dt, A, bm, cm, 32)
+    assert bool(jnp.isfinite(y).all())
