@@ -28,9 +28,11 @@ def run(csv=True, n_samples=512, seq=16):
     with InferenceSystem(cfgs, params, alloc, segment_size=128,
                          max_seq=seq, fake=True) as fake_sys:
         _, fake_thr = fake_sys.benchmark(X, repeats=3)
+        fake_stages = fake_sys.stage_timings()
     with InferenceSystem(cfgs, params, alloc, segment_size=128,
                          max_seq=seq) as real_sys:
         _, real_thr = real_sys.benchmark(X)
+        real_stages = real_sys.stage_timings()
 
     fake_time = n_samples / fake_thr          # pipeline-only time
     real_time = n_samples / real_thr
@@ -40,8 +42,13 @@ def run(csv=True, n_samples=512, seq=16):
         print(f"overhead:pipeline_time_s,{fake_time:.4f}")
         print(f"overhead:total_time_s,{real_time:.4f}")
         print(f"overhead:overhead_pct,{overhead_pct:.2f}")
+        for label, stages in [("pipeline", fake_stages), ("total", real_stages)]:
+            for stage, t in stages.items():
+                print(f"overhead:{label}.{stage}_s,{t['total_s']:.4f}")
     return {"pipeline_s": fake_time, "total_s": real_time,
-            "overhead_pct": overhead_pct}
+            "overhead_pct": overhead_pct,
+            "pipeline_stage_timings": fake_stages,
+            "total_stage_timings": real_stages}
 
 
 if __name__ == "__main__":

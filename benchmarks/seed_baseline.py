@@ -1,0 +1,227 @@
+"""The SEED serving hot path, vendored verbatim-in-spirit for A/B benchmarks.
+
+This module preserves the pre-hot-path-rewrite implementation (commit
+``e46b2aa``, trimmed to what the fake-model overhead benchmark exercises) so
+``benchmarks/serving_hotpath.py`` can measure the new engine against the real
+"before", not a weakened flag on the new engine:
+
+  * per-batch ``np.concatenate`` padding and per-chunk allocation in the
+    batcher (no ring buffers, no shape buckets);
+  * one {s, m, P} message and one device->host sync per member per segment
+    (no device-resident partial combine);
+  * a single shared-X buffer and a single-request accumulator — ``predict()``
+    calls fully serialize (no request ids, no in-flight window).
+
+Do not use this for serving; it exists only as a measurement baseline.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.allocation import AllocationMatrix
+from repro.serving import segments as seg
+from repro.serving.segments import DEFAULT_SEGMENT_SIZE, SHUTDOWN, Message
+
+
+class SeedWorker:
+    """Seed worker, fake-predictor path only (zeros per batch chunk)."""
+
+    def __init__(self, worker_id: str, cfg: ModelConfig, batch_size: int,
+                 input_queue: "queue.Queue", prediction_queue: "queue.Queue",
+                 model_idx: int, shared_x: np.ndarray):
+        self.worker_id = worker_id
+        self.batch_size = batch_size
+        self.model_idx = model_idx
+        self.input_queue = input_queue
+        self.prediction_queue = prediction_queue
+        self.shared_x = shared_x
+        self.num_classes = cfg.vocab_size
+        self._batch_q: "queue.Queue" = queue.Queue(maxsize=4)
+        self._send_q: "queue.Queue" = queue.Queue(maxsize=8)
+        self._threads: List[threading.Thread] = []
+        self.prediction_queue.put(Message(seg.READY, model_idx, None))
+
+    def start(self):
+        for fn, name in [(self._batcher, "batcher"), (self._predictor, "predictor"),
+                         (self._sender, "sender")]:
+            t = threading.Thread(target=fn, name=f"{self.worker_id}-{name}",
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def join(self, timeout: float = 30.0):
+        for t in self._threads:
+            t.join(timeout)
+
+    def _batcher(self):
+        while True:
+            item = self.input_queue.get()
+            if item == SHUTDOWN:
+                self._batch_q.put(None)
+                return
+            s, nb_samples = item
+            lo = seg.start(s, 128)
+            hi = seg.end(s, 128, nb_samples)
+            data = self.shared_x[lo:hi]
+            batches = []
+            for i in range(0, len(data), self.batch_size):
+                chunk = data[i:i + self.batch_size]
+                n = len(chunk)
+                if n < self.batch_size:        # pad to the compiled shape
+                    chunk = np.concatenate(
+                        [chunk, np.zeros((self.batch_size - n,) + chunk.shape[1:],
+                                         chunk.dtype)])
+                batches.append((chunk, n))
+            self._batch_q.put((s, hi - lo, batches))
+
+    def _predictor(self):
+        while True:
+            item = self._batch_q.get()
+            if item is None:
+                self._send_q.put(None)
+                return
+            s, total, batches = item
+            outs = [(np.zeros((self.batch_size, self.num_classes), np.float32), n)
+                    for _, n in batches]       # fake predictor
+            self._send_q.put((s, total, outs))
+
+    def _sender(self):
+        while True:
+            item = self._send_q.get()
+            if item is None:
+                return
+            s, total, outs = item
+            parts = [np.asarray(y)[:n] for y, n in outs]   # sync point
+            P = np.concatenate(parts, axis=0)
+            assert P.shape[0] == total
+            self.prediction_queue.put(Message(s, self.model_idx, P))
+
+
+class SeedAccumulator:
+    """Seed single-request accumulator, mean rule."""
+
+    def __init__(self, prediction_queue: "queue.Queue", num_models: int):
+        self.q = prediction_queue
+        self.M = num_models
+        self.weights = np.full(num_models, 1.0 / num_models, np.float32)
+        self.ready_count = 0
+        self.all_ready = threading.Event()
+        self._expected_ready_count = None
+        self._thread: Optional[threading.Thread] = None
+        self.Y: Optional[np.ndarray] = None
+        self.nb_samples = 0
+        self._remaining = 0
+        self.done = threading.Event()
+        self.data_messages = 0
+
+    def begin(self, nb_samples: int, num_classes: int, members: List[int]):
+        self._members = members
+        self.Y = np.zeros((nb_samples, num_classes), np.float32)
+        self.nb_samples = nb_samples
+        self._remaining = seg.num_segments(nb_samples, 128) * len(members)
+        self.done.clear()
+
+    def wait(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self.done.wait(timeout):
+            raise TimeoutError("seed accumulator timed out")
+        return self.Y
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self.q.put(None)
+        if self._thread:
+            self._thread.join(10.0)
+
+    def expect_ready(self, n: int):
+        self._expected_ready_count = n
+        if self.ready_count >= n:
+            self.all_ready.set()
+
+    def _run(self):
+        while True:
+            msg = self.q.get()
+            if msg is None:
+                return
+            if msg.s == seg.READY:
+                self.ready_count += 1
+                if self.ready_count >= (self._expected_ready_count or 1):
+                    self.all_ready.set()
+                continue
+            lo = seg.start(msg.s, 128)
+            hi = seg.end(msg.s, 128, self.nb_samples)
+            self.data_messages += 1
+            self.Y[lo:hi] += msg.P * self.weights[msg.m]
+            self._remaining -= 1
+            if self._remaining == 0:
+                self.done.set()
+
+
+class SeedSystem:
+    """Seed inference system: shared X buffer, per-model queues, serialized
+    requests.  Fake predictors only (the overhead-measurement configuration)."""
+
+    segment_size = DEFAULT_SEGMENT_SIZE
+
+    def __init__(self, cfgs: Sequence[ModelConfig], alloc: AllocationMatrix,
+                 *, max_seq: int = 128):
+        alloc.validate()
+        self.cfgs = list(cfgs)
+        self.M = len(self.cfgs)
+        self.num_classes = cfgs[0].vocab_size
+        self.shared_x = np.zeros((self.segment_size, max_seq), np.int32)
+        self.prediction_queue: "queue.Queue" = queue.Queue()
+        self.model_queues: List[queue.Queue] = [queue.Queue() for _ in cfgs]
+        self.accumulator = SeedAccumulator(self.prediction_queue, self.M)
+        self.workers: List[SeedWorker] = []
+        for d, m, batch in alloc.workers():
+            w = SeedWorker(f"w{d}.{m}", self.cfgs[m], batch,
+                           self.model_queues[m], self.prediction_queue, m,
+                           self.shared_x)
+            self.workers.append(w)
+        self.accumulator.expect_ready(len(self.workers))
+        self.accumulator.start()
+        for w in self.workers:
+            w.start()
+        self.accumulator.all_ready.wait(60.0)
+        self._shutdown = False
+
+    def predict(self, X: np.ndarray, timeout: float = 600.0) -> np.ndarray:
+        X = np.asarray(X, np.int32)
+        n = X.shape[0]
+        if n > self.shared_x.shape[0] or X.shape[1] != self.shared_x.shape[1]:
+            self.shared_x = np.zeros((max(n, self.shared_x.shape[0]),
+                                      X.shape[1]), np.int32)
+            for w in self.workers:
+                w.shared_x = self.shared_x
+        self.shared_x[:n] = X
+        members = list(range(self.M))
+        self.accumulator.begin(n, self.num_classes, members)
+        for s in range(seg.num_segments(n, self.segment_size)):
+            for m in members:
+                self.model_queues[m].put((s, n))
+        return self.accumulator.wait(timeout)
+
+    def shutdown(self):
+        if self._shutdown:
+            return
+        self._shutdown = True
+        for m, q in enumerate(self.model_queues):
+            for _ in [w for w in self.workers if w.model_idx == m]:
+                q.put(SHUTDOWN)
+        for w in self.workers:
+            w.join()
+        self.accumulator.stop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

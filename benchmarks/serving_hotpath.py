@@ -1,0 +1,97 @@
+"""Serving hot-path A/B: seed-style path vs the pipelined zero-copy engine.
+
+Overhead-dominated regime (paper §IV.A): M=4 fake workers sharing ONE device,
+so prediction costs ~nothing and the measurement isolates the serving machinery
+— batching, queues, transfers, combination.  Compares:
+
+  * ``seed``      per-member messages (``device_combine=False``), one request
+                  in flight (``max_in_flight=1``) — the seed's behavior;
+  * ``pipelined`` device-resident partial combine + multi-request in-flight
+                  window — one accumulator message per device per segment.
+
+Reports segments/sec, accumulator messages per request, and per-stage timings.
+Acceptance (ISSUE 1): pipelined >= 1.5x seed segments/sec, and messages per
+request drop from M x segments to devices x segments.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.seed_baseline import SeedSystem
+from repro.configs import ensemble
+from repro.core import AllocationMatrix, host_cpus
+from repro.serving import segments as seg
+
+GiB = 1024 ** 3
+
+
+def _measure(system, X, requests: int, pipelined: bool) -> dict:
+    n_segments = seg.num_segments(X.shape[0], system.segment_size)
+    system.predict(X)                      # warm
+    if pipelined:
+        system.timers.reset()
+    msg0 = system.accumulator.data_messages
+    t0 = time.perf_counter()
+    if pipelined:                          # overlap through the window
+        handles = [system.predict_async(X) for _ in range(requests)]
+        for h in handles:
+            h.result(600.0)
+    else:                                  # seed path: requests serialize
+        for _ in range(requests):
+            system.predict(X)
+    dt = time.perf_counter() - t0
+    return {
+        "requests": requests,
+        "segments_per_request": n_segments,
+        "seconds": dt,
+        "segments_per_sec": requests * n_segments / dt,
+        "samples_per_sec": requests * X.shape[0] / dt,
+        "messages_per_request":
+            (system.accumulator.data_messages - msg0) / requests,
+        "stage_timings": system.stage_timings() if pipelined else {},
+    }
+
+
+def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4):
+    import jax
+    import repro.models as M
+    from repro.serving.system import InferenceSystem
+
+    cfgs = ensemble("ENS4")[:workers]
+    rng = jax.random.PRNGKey(0)
+    params = [M.init_params(jax.random.fold_in(rng, i), c)
+              for i, c in enumerate(cfgs)]
+    devs = host_cpus(1, memory_bytes=8 * GiB)       # ONE shared device
+    A = np.full((1, len(cfgs)), 8)
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    X = np.random.default_rng(0).integers(0, 512, (n_samples, seq)).astype(np.int32)
+
+    results = {}
+    with SeedSystem(cfgs, alloc, max_seq=seq) as system:
+        results["seed"] = _measure(system, X, requests, pipelined=False)
+    with InferenceSystem(cfgs, params, alloc, segment_size=128,
+                         max_seq=seq, fake=True, device_combine=True,
+                         max_in_flight=4) as system:
+        results["pipelined"] = _measure(system, X, requests, pipelined=True)
+
+    speedup = (results["pipelined"]["segments_per_sec"] /
+               results["seed"]["segments_per_sec"])
+    results["speedup"] = speedup
+    if csv:
+        print("serving_hotpath:variant,segments_per_sec,messages_per_request")
+        for name in ("seed", "pipelined"):
+            r = results[name]
+            print(f"serving_hotpath:{name},{r['segments_per_sec']:.1f},"
+                  f"{r['messages_per_request']:.1f}")
+        print(f"serving_hotpath:speedup,{speedup:.2f},")
+        for name in ("seed", "pipelined"):
+            for stage, t in results[name]["stage_timings"].items():
+                print(f"serving_hotpath:{name}.{stage},"
+                      f"{t['total_s']:.4f},{t['count']}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

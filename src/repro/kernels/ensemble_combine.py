@@ -6,9 +6,18 @@ whole segment combine into one kernel: given the stacked member predictions
 ``P (M, seg, C)`` and combination weights ``w (M,)`` (uniform 1/M for
 averaging, arbitrary for weighted averaging), produce ``Y (seg, C)``.
 
+Two variants share the grid/tiling:
+  * ``ensemble_combine(P, w)``                -> Σ_m w_m P_m  (fresh combine)
+  * ``ensemble_combine(P, w, partial=Y0)``    -> Y0 + Σ_m w_m P_m
+The second is the *accumulate-into-partial* form used by the device-resident
+partial combine (DESIGN.md §4): workers co-located on one device fold their
+weighted predictions into a running partial on-device, so only one
+device->host transfer happens per device per segment instead of M.
+
 Tiling: grid = (seg_blocks, c_blocks, M); the member dim is innermost and
 sequential, accumulating into a VMEM f32 scratch tile, so each (seg, C) output
-tile is written once — the memory-bound optimum (reads M·seg·C, writes seg·C).
+tile is written once — the memory-bound optimum (reads M·seg·C (+seg·C for the
+partial), writes seg·C).
 """
 from __future__ import annotations
 
@@ -37,25 +46,50 @@ def _kernel(p_ref, w_ref, y_ref, acc_ref, *, members: int):
         y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
-def ensemble_combine(preds: jax.Array, weights: jax.Array, *,
+def _accum_kernel(part_ref, p_ref, w_ref, y_ref, acc_ref, *, members: int):
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = part_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += p_ref[0].astype(jnp.float32) * w_ref[0].astype(jnp.float32)
+
+    @pl.when(mi == members - 1)
+    def _finalize():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def ensemble_combine(preds: jax.Array, weights: jax.Array,
+                     partial: jax.Array = None, *,
                      block_seg: int = BLOCK_SEG, block_c: int = BLOCK_C,
                      interpret: bool = False) -> jax.Array:
-    """preds: (M, seg, C); weights: (M,).  Returns (seg, C) weighted sum."""
+    """preds: (M, seg, C); weights: (M,); optional partial: (seg, C).
+    Returns (seg, C) weighted sum, plus ``partial`` when given."""
     m, seg, c = preds.shape
     block_seg = min(block_seg, seg)
     block_c = min(block_c, c)
     assert seg % block_seg == 0 and c % block_c == 0, (seg, c, block_seg, block_c)
 
-    kernel = functools.partial(_kernel, members=m)
+    tile = pl.BlockSpec((block_seg, block_c), lambda s_, c_, m_: (s_, c_))
+    in_specs = [
+        pl.BlockSpec((1, block_seg, block_c), lambda s_, c_, m_: (m_, s_, c_)),
+        pl.BlockSpec((1,), lambda s_, c_, m_: (m_,)),
+    ]
+    if partial is None:
+        kernel = functools.partial(_kernel, members=m)
+        operands = (preds, weights)
+    else:
+        assert partial.shape == (seg, c), (partial.shape, seg, c)
+        kernel = functools.partial(_accum_kernel, members=m)
+        in_specs = [tile] + in_specs
+        operands = (partial, preds, weights)
     return pl.pallas_call(
         kernel,
         grid=(seg // block_seg, c // block_c, m),
-        in_specs=[
-            pl.BlockSpec((1, block_seg, block_c), lambda s_, c_, m_: (m_, s_, c_)),
-            pl.BlockSpec((1,), lambda s_, c_, m_: (m_,)),
-        ],
-        out_specs=pl.BlockSpec((block_seg, block_c), lambda s_, c_, m_: (s_, c_)),
+        in_specs=in_specs,
+        out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((seg, c), preds.dtype),
         scratch_shapes=[pltpu.VMEM((block_seg, block_c), jnp.float32)],
         interpret=interpret,
-    )(preds, weights)
+    )(*operands)

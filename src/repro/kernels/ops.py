@@ -38,6 +38,11 @@ def pallas_enabled() -> bool:
     return not _interpret()
 
 
+def pow2_clamp(n: int, lo: int, hi: int) -> int:
+    """Next power of two >= n, clamped to [lo, hi] (block-size selection)."""
+    return min(hi, max(lo, 1 << max(n - 1, 1).bit_length()))
+
+
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -52,7 +57,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
     """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd); scale 1/sqrt(hd)."""
     s, hd = q.shape[1], q.shape[3]
     q = q * (hd ** -0.5)
-    bq = min(_fa.BLOCK_Q, max(8, 1 << (s - 1).bit_length()))
+    bq = pow2_clamp(s, 8, _fa.BLOCK_Q)
     bkv = min(_fa.BLOCK_KV, bq)
     qp = _pad_to(_pad_to(q, 1, bq), 3, 128)
     kp = _pad_to(_pad_to(k, 1, bkv), 3, 128)
@@ -70,7 +75,7 @@ def decode_attention(q, k, v, valid):
     """q: (B,1,H,hd), k/v: (B,L,KV,hd), valid: (L,) bool -> (B,1,H,hd)."""
     hd, L = q.shape[3], k.shape[1]
     q = q * (hd ** -0.5)
-    bkv = min(_dec.BLOCK_KV, max(8, 1 << (L - 1).bit_length()))
+    bkv = pow2_clamp(L, 8, _dec.BLOCK_KV)
     qp = _pad_to(q, 3, 128)
     kp = _pad_to(_pad_to(k, 1, bkv), 3, 128)
     vp = _pad_to(_pad_to(v, 1, bkv), 3, 128)
@@ -92,13 +97,35 @@ def ssd_scan(x, dt, A, bmat, cmat, *, chunk: int = 64):
     return out[:, :s]
 
 
+def _combine_blocks(seg: int, c: int):
+    """Block sizes legal for the TPU kernel at ANY (seg, C): the seg block is
+    a power of two in [8, BLOCK_SEG] (sublane multiple), the class block a
+    multiple of 128 in [128, BLOCK_C] (lane width).  Inputs are padded up to
+    block multiples, so arbitrary segment sizes never hit the kernel's
+    divisibility assert."""
+    return (pow2_clamp(seg, 8, _comb.BLOCK_SEG),
+            pow2_clamp(c, 128, _comb.BLOCK_C))
+
+
 @jax.jit
 def ensemble_combine(preds, weights):
     """preds: (M, seg, C), weights: (M,) -> (seg, C)."""
     seg, c = preds.shape[1], preds.shape[2]
-    bs = min(_comb.BLOCK_SEG, max(8, 1 << (seg - 1).bit_length()))
-    bc = min(_comb.BLOCK_C, max(8, 1 << (c - 1).bit_length()))
+    bs, bc = _combine_blocks(seg, c)
     pp = _pad_to(_pad_to(preds, 1, bs), 2, bc)
     out = _comb.ensemble_combine(pp, weights, block_seg=bs, block_c=bc,
+                                 interpret=_interpret())
+    return out[:seg, :c]
+
+
+@jax.jit
+def ensemble_accumulate(partial, preds, weights):
+    """Accumulate-into-partial combine (DESIGN.md §4): ``partial (seg, C)``
+    + ``preds (M, seg, C)`` weighted by ``weights (M,)`` -> (seg, C)."""
+    seg, c = preds.shape[1], preds.shape[2]
+    bs, bc = _combine_blocks(seg, c)
+    pp = _pad_to(_pad_to(preds, 1, bs), 2, bc)
+    part = _pad_to(_pad_to(partial.astype(preds.dtype), 0, bs), 1, bc)
+    out = _comb.ensemble_combine(pp, weights, part, block_seg=bs, block_c=bc,
                                  interpret=_interpret())
     return out[:seg, :c]

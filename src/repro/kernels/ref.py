@@ -73,3 +73,10 @@ def ensemble_combine_ref(preds, weights):
     """preds: (M, seg, C), weights: (M,) -> (seg, C)."""
     return jnp.einsum("m,msc->sc", weights.astype(jnp.float32),
                       preds.astype(jnp.float32)).astype(preds.dtype)
+
+
+def ensemble_accumulate_ref(partial, preds, weights):
+    """partial: (seg, C) + weighted member sum — the accumulate variant."""
+    return (partial.astype(jnp.float32)
+            + ensemble_combine_ref(preds, weights).astype(jnp.float32)
+            ).astype(preds.dtype)

@@ -34,6 +34,15 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
 
 
+def cost_analysis_dict(obj) -> dict:
+    """Normalize {Lowered,Compiled}.cost_analysis() across jax versions —
+    older releases return one dict per device in a list."""
+    ca = obj.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def applicable(arch: str, shape: str) -> bool:
     cfg = get_config(arch)
     if shape == "long_500k" and not long_context_ok(cfg):
@@ -78,7 +87,7 @@ def run_one(arch: str, shape: str, mesh_kind: str = "single", *,
         t1 = time.perf_counter()
         compiled = lowered.compile()
         rec["compile_s"] = round(time.perf_counter() - t1, 2)
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         rec["cost_analysis"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
@@ -90,7 +99,7 @@ def run_one(arch: str, shape: str, mesh_kind: str = "single", *,
         try:
             runtime_flags.set_unroll(True)
             unrolled, _ = steps_mod.lower_step(cfg, shape, mesh)
-            uca = unrolled.cost_analysis() or {}
+            uca = cost_analysis_dict(unrolled)
             rec["global_cost"] = {
                 "flops": float(uca.get("flops", 0.0)),
                 "bytes_accessed": float(uca.get("bytes accessed", 0.0)),

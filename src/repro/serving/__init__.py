@@ -1,11 +1,14 @@
 """The asynchronous inference system (paper §II): segment broadcaster,
 worker pool, prediction accumulator, HTTP wrapper."""
-from repro.serving.accumulator import PredictionAccumulator
-from repro.serving.segments import DEFAULT_SEGMENT_SIZE, Message
+from repro.serving.accumulator import PredictionAccumulator, RequestHandle
+from repro.serving.combiner import DeviceCombiner
+from repro.serving.metrics import StageTimers
+from repro.serving.segments import DEFAULT_SEGMENT_SIZE, Message, Request
 from repro.serving.server import AdaptiveBatcher, serve
 from repro.serving.system import InferenceSystem
-from repro.serving.worker import Worker, make_predict_fn
+from repro.serving.worker import Worker, bucket_for, make_predict_fn
 
-__all__ = ["InferenceSystem", "Worker", "make_predict_fn", "Message",
-           "PredictionAccumulator", "AdaptiveBatcher", "serve",
+__all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
+           "Message", "Request", "RequestHandle", "PredictionAccumulator",
+           "DeviceCombiner", "StageTimers", "AdaptiveBatcher", "serve",
            "DEFAULT_SEGMENT_SIZE"]

@@ -1,28 +1,64 @@
-"""The prediction accumulator (paper §II.C.2).
+"""The prediction accumulator (paper §II.C.2), multi-request edition.
 
-Consumes {s, m, P} messages and folds them into the ensemble prediction:
-``Y[start(s):end(s)] += P / M`` for averaging — or, with
-``combine="pallas"``, buffers a segment's M member predictions and fuses the
-weighted combine in the ensemble_combine Pallas kernel (DESIGN.md §7.4).
-Other rules: "weighted" (per-member weights), "vote" (majority voting on
-argmax).
+Consumes messages from the single prediction queue and folds them into the
+per-request ensemble prediction.  Two message kinds (DESIGN.md §§3-4):
+
+  * **device partials** (``m is None``): already-weighted sums of ``count``
+    member predictions, pre-combined on one device — the fold is just
+    ``Y[start(s):end(s)] += P`` and the bookkeeping debits ``count``;
+  * **per-member messages** (legacy path, ``device_combine=False``): the
+    paper's {s, m, P} triplet, folded under the request's combine rule —
+    "mean"/"weighted" (``Y += w_m P``), "vote" (majority voting on argmax),
+    or "pallas" (buffer the segment's M member predictions, then fuse the
+    weighted combine in the ensemble_combine Pallas kernel, DESIGN.md §7.4).
+
+Every message carries a request id, so any number of requests can be in
+flight; each ``begin()`` returns a :class:`RequestHandle` the caller waits
+on, and a completion callback lets the system recycle the request's input
+buffer and open the in-flight window for the next request.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
 from repro.serving import segments as seg
-from repro.serving.segments import Message
+from repro.serving.metrics import StageTimers
+from repro.serving.segments import Message, Request
+
+
+class RequestHandle:
+    """Per-request accumulation state + the client-side future."""
+
+    def __init__(self, req: Request):
+        self.req = req
+        self.Y = np.zeros((req.n, req.num_classes), np.float32)
+        self.remaining = req.num_segments() * len(req.members)
+        self.done = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.messages = 0                     # data messages folded
+        self._seg_buffers: Dict[int, Dict[int, np.ndarray]] = {}
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self.done.wait(timeout):
+            raise TimeoutError("prediction accumulator timed out")
+        if self.error is not None:
+            raise self.error
+        return self.Y
 
 
 class PredictionAccumulator:
     def __init__(self, prediction_queue: "queue.Queue[Message]",
                  num_models: int, *, combine: str = "mean",
-                 weights: Optional[np.ndarray] = None):
+                 weights: Optional[np.ndarray] = None,
+                 timers: Optional[StageTimers] = None,
+                 on_complete: Optional[Callable[[RequestHandle], None]] = None):
+        if combine not in ("mean", "weighted", "vote", "pallas"):
+            raise ValueError(f"unknown combine rule {combine!r}")
         self.q = prediction_queue
         self.M = num_models
         self.combine = combine
@@ -30,41 +66,41 @@ class PredictionAccumulator:
                         else np.full(num_models, 1.0 / num_models, np.float32))
         if combine == "mean":
             self.weights = np.full(num_models, 1.0 / num_models, np.float32)
+        self.timers = timers or StageTimers()
+        self.on_complete = on_complete
         self.ready_count = 0
         self.oom = threading.Event()
         self.all_ready = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        # per-request state
-        self.Y: Optional[np.ndarray] = None
-        self.segment_size = 0
-        self.nb_samples = 0
-        self._remaining = 0
-        self._seg_buffers: Dict[int, List[Optional[np.ndarray]]] = {}
-        self.done = threading.Event()
+        self._lock = threading.Lock()
+        self._requests: Dict[int, RequestHandle] = {}
+        self._last: Optional[RequestHandle] = None
+        self.data_messages = 0                # partials + per-member messages
 
     # ---- request lifecycle ----------------------------------------------------
-    def begin(self, nb_samples: int, num_classes: int, segment_size: int,
-              members=None):
-        """``members``: optional subset of model ids answering this request
-        (paper §I.B "ensemble selection"); weights renormalize over them."""
-        members = list(range(self.M)) if members is None else list(members)
-        self._members = members
-        wsum = float(self.weights[members].sum())
-        self._active_weights = {m: float(self.weights[m]) / max(wsum, 1e-12)
-                                for m in members}
-        self.Y = np.zeros((nb_samples, num_classes), np.float32)
-        self.nb_samples = nb_samples
-        self.segment_size = segment_size
-        self._remaining = seg.num_segments(nb_samples, segment_size) * len(members)
-        self._seg_buffers = {}
-        self.done.clear()
-        if self._remaining == 0:
-            self.done.set()
+    def begin(self, req: Request) -> RequestHandle:
+        handle = RequestHandle(req)
+        with self._lock:
+            self._requests[req.rid] = handle
+            self._last = handle
+        if handle.remaining == 0:             # empty request
+            self._finish(handle)
+        return handle
 
     def wait(self, timeout: Optional[float] = None) -> np.ndarray:
-        if not self.done.wait(timeout):
-            raise TimeoutError("prediction accumulator timed out")
-        return self.Y
+        """Legacy single-request helper: waits on the most recent begin()."""
+        with self._lock:
+            handle = self._last
+        if handle is None:
+            raise RuntimeError("no request in flight")
+        return handle.result(timeout)
+
+    def _finish(self, handle: RequestHandle):
+        with self._lock:
+            self._requests.pop(handle.req.rid, None)
+        handle.done.set()
+        if self.on_complete is not None:
+            self.on_complete(handle)
 
     # ---- the accumulation loop -------------------------------------------------
     def start(self):
@@ -87,9 +123,14 @@ class PredictionAccumulator:
                 if self.ready_count >= self._expected_ready():
                     self.all_ready.set()
                 continue
-            if msg.s == seg.OOM and msg.m is None:
+            if msg.s == seg.OOM and msg.m is None and msg.P is None:
                 self.oom.set()
-                self.done.set()
+                with self._lock:
+                    pending = list(self._requests.values())
+                for h in pending:
+                    h.error = MemoryError(
+                        "a worker reported OOM ({-1, None, None})")
+                    self._finish(h)
                 continue
             self._accumulate(msg)
 
@@ -104,31 +145,47 @@ class PredictionAccumulator:
         return self._expected_ready_count or 1
 
     def _accumulate(self, msg: Message):
-        lo = seg.start(msg.s, self.segment_size)
-        hi = seg.end(msg.s, self.segment_size, self.nb_samples)
-        members = getattr(self, "_members", list(range(self.M)))
-        weights = getattr(self, "_active_weights",
-                          {m: float(self.weights[m]) for m in members})
-        if self.combine in ("mean", "weighted"):
-            # the paper's one-liner: Y[start:end] += P / M (weighted general form)
-            self.Y[lo:hi] += msg.P * weights[msg.m]
-        elif self.combine == "vote":
-            onehot = np.zeros_like(self.Y[lo:hi])
-            onehot[np.arange(hi - lo), msg.P.argmax(axis=1)] = 1.0 / len(members)
-            self.Y[lo:hi] += onehot
-        elif self.combine == "pallas":
-            buf = self._seg_buffers.setdefault(msg.s, {})
+        t0 = time.perf_counter()
+        with self._lock:
+            handle = self._requests.get(msg.rid)
+        if handle is None:                    # stale (timed-out/failed request)
+            return
+        req = handle.req
+        lo, hi = req.bounds(msg.s)
+        self.data_messages += 1
+        handle.messages += 1
+        if msg.m is None:
+            # device partial: weights already applied on-device
+            handle.Y[lo:hi] += msg.P
+            handle.remaining -= msg.count
+        else:
+            self._fold_member(handle, msg, lo, hi)
+            handle.remaining -= 1
+        self.timers.add("accumulate", time.perf_counter() - t0)
+        if handle.remaining == 0:
+            self._finish(handle)
+
+    def _fold_member(self, handle: RequestHandle, msg: Message,
+                     lo: int, hi: int):
+        req = handle.req
+        w = req.weights[msg.m]
+        if req.combine in ("mean", "weighted"):
+            # the paper's one-liner: Y[start:end] += P / M (weighted form)
+            handle.Y[lo:hi] += msg.P * w
+        elif req.combine == "vote":
+            onehot = np.zeros_like(handle.Y[lo:hi])
+            onehot[np.arange(hi - lo), msg.P.argmax(axis=1)] = w
+            handle.Y[lo:hi] += onehot
+        elif req.combine == "pallas":
+            buf = handle._seg_buffers.setdefault(msg.s, {})
             buf[msg.m] = msg.P
-            if len(buf) == len(members):
+            if len(buf) == len(req.members):
                 from repro.kernels import ops as kops
                 import jax.numpy as jnp
-                stacked = jnp.asarray(np.stack([buf[m] for m in members]))
-                w = jnp.asarray(np.array([weights[m] for m in members],
-                                         np.float32))
-                self.Y[lo:hi] = np.asarray(kops.ensemble_combine(stacked, w))
-                del self._seg_buffers[msg.s]
+                stacked = jnp.asarray(np.stack([buf[m] for m in req.members]))
+                wv = jnp.asarray(np.array([req.weights[m] for m in req.members],
+                                          np.float32))
+                handle.Y[lo:hi] = np.asarray(kops.ensemble_combine(stacked, wv))
+                del handle._seg_buffers[msg.s]
         else:
-            raise ValueError(f"unknown combine rule {self.combine!r}")
-        self._remaining -= 1
-        if self._remaining == 0:
-            self.done.set()
+            raise ValueError(f"unknown combine rule {req.combine!r}")

@@ -1,0 +1,140 @@
+"""Device-resident partial ensemble combine (DESIGN.md §4).
+
+Workers co-located on one device fold their weighted predictions into a
+shared per-(request, segment) partial *on the device* and post **one**
+``Message(s, None, partial, rid, count)`` per device per segment — instead of
+one {s, m, P} message (and one device->host transfer) per member.  With M
+members sharing a device this cuts accumulator traffic by up to M×.
+
+How the flush trigger stays deterministic: the broadcaster assigns every
+(segment, model) pair to a *specific* worker instance (round-robin striping
+across data-parallel instances, system.py), so at ``begin()`` time the system
+knows exactly how many member contributions each device will produce for each
+segment.  The combiner flushes a segment the moment its count is reached.
+
+Combination rules are applied member-side, so the partial is always additive:
+  mean/weighted  partial += w_m · P_m
+  vote           partial += w_vote · onehot(argmax P_m)
+  pallas         partial  = ensemble_combine(P_m[None], [w_m], partial) — the
+                 accumulate-into-partial Pallas kernel variant
+and the accumulator's per-message work collapses to ``Y[lo:hi] += partial``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.metrics import StageTimers
+from repro.serving.segments import Message, Request
+
+
+class _SegPartial:
+    __slots__ = ("acc", "got")
+
+    def __init__(self):
+        self.acc = None        # np.ndarray or jax.Array (device-resident)
+        self.got = 0
+
+
+class DeviceCombiner:
+    """One per device hosting >= 1 worker.  ``add()`` is called from worker
+    sender threads; a per-combiner lock serializes the fold bookkeeping (the
+    device math itself is dispatched asynchronously)."""
+
+    def __init__(self, name: str, prediction_queue: "queue.Queue[Message]",
+                 timers: Optional[StageTimers] = None):
+        self.name = name
+        self.prediction_queue = prediction_queue
+        self.timers = timers
+        self._lock = threading.Lock()
+        # rid -> {s: expected contribution count} (segments with count > 0)
+        self._expected: Dict[int, Dict[int, int]] = {}
+        self._parts: Dict[Tuple[int, int], _SegPartial] = {}
+        self.partials_posted = 0
+
+    # ---- request lifecycle ---------------------------------------------------
+    def begin(self, req: Request, expected: Dict[int, int]) -> None:
+        """Register how many member contributions each segment of ``req``
+        will see on this device."""
+        with self._lock:
+            self._expected[req.rid] = {s: n for s, n in expected.items() if n}
+
+    def finish(self, rid: int) -> None:
+        """Drop any state for a completed/failed request (idempotent)."""
+        with self._lock:
+            self._expected.pop(rid, None)
+            for key in [k for k in self._parts if k[0] == rid]:
+                del self._parts[key]
+
+    # ---- the fold ------------------------------------------------------------
+    def add(self, req: Request, s: int, m: int, P) -> None:
+        """Fold member ``m``'s segment-``s`` prediction into the device
+        partial; post the partial once the segment's expected count is
+        reached.  ``P`` may be a numpy array (fake workers) or a device
+        array — device arrays stay resident until the single flush
+        transfer."""
+        t0 = time.perf_counter()
+        flush = None
+        # the heavy elementwise math runs outside the lock; only the
+        # accumulate + bookkeeping is serialized
+        contrib = self._contribution(req, P, req.weights[m])
+        with self._lock:
+            expected = self._expected.get(req.rid)
+            if expected is None or s not in expected:   # request torn down
+                return
+            part = self._parts.setdefault((req.rid, s), _SegPartial())
+            part.acc = self._fold(req, part.acc, contrib, req.weights[m])
+            part.got += 1
+            if part.got >= expected[s]:
+                flush = part
+                del self._parts[(req.rid, s)]
+                del expected[s]
+                if not expected:
+                    del self._expected[req.rid]
+        if flush is not None:
+            # the single device->host transfer per device per segment
+            self.prediction_queue.put(Message(
+                s, None, np.asarray(flush.acc), rid=req.rid, count=flush.got))
+            self.partials_posted += 1
+        if self.timers is not None:
+            self.timers.add("combine", time.perf_counter() - t0)
+
+    @staticmethod
+    def _contribution(req: Request, P, w: float):
+        """Member's additive contribution (weighted prediction / vote).  For
+        the pallas rule the raw device array passes through: the weighting is
+        fused into the accumulate kernel at fold time."""
+        if req.combine == "vote":
+            if isinstance(P, np.ndarray):
+                contrib = np.zeros((P.shape[0], req.num_classes), np.float32)
+                contrib[np.arange(P.shape[0]), P.argmax(axis=1)] = w
+                return contrib
+            import jax
+            return w * jax.nn.one_hot(P.argmax(axis=-1), req.num_classes,
+                                      dtype=np.float32)
+        if req.combine == "pallas" and not isinstance(P, np.ndarray):
+            return P
+        # mean / weighted (and pallas with host arrays from fake workers)
+        return P * np.float32(w)
+
+    @staticmethod
+    def _fold(req: Request, acc, contrib, w: float):
+        if req.combine == "pallas" and not isinstance(contrib, np.ndarray):
+            import jax.numpy as jnp
+            from repro.kernels import ops as kops
+            if acc is None:
+                acc = jnp.zeros(contrib.shape, jnp.float32)
+            # the accumulate-into-partial Pallas kernel variant
+            return kops.ensemble_accumulate(
+                acc, contrib[None].astype(jnp.float32),
+                jnp.full((1,), w, jnp.float32))
+        if acc is None:
+            return contrib
+        if isinstance(acc, np.ndarray):
+            acc += contrib                     # in-place: no temp per fold
+            return acc
+        return acc + contrib

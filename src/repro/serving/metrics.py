@@ -1,0 +1,44 @@
+"""Per-stage timing counters for the serving hot path (DESIGN.md §6).
+
+Stages (one wall-clock accumulator each, shared by all threads):
+  ``batcher_wait``   time a batcher spends blocked on its input queue,
+  ``batch_fill``     copying segment rows into ring-buffer slots,
+  ``predict``        jitted-step dispatch (async — excludes device time),
+  ``transfer``       device sync + device->host fetch in the sender,
+  ``combine``        device-partial / accumulator fold time.
+
+float += under the GIL is atomic enough for counters; a lock would cost more
+than the statistic is worth, so snapshots are only approximately consistent.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Dict
+
+
+class StageTimers:
+    def __init__(self):
+        self.total_s: Dict[str, float] = defaultdict(float)
+        self.count: Dict[str, int] = defaultdict(int)
+
+    def add(self, stage: str, dt: float) -> None:
+        self.total_s[stage] += dt
+        self.count[stage] += 1
+
+    def timed(self, stage: str, t0: float) -> float:
+        """Record ``now - t0`` under ``stage``; returns now (chains stages)."""
+        now = time.perf_counter()
+        self.add(stage, now - t0)
+        return now
+
+    def reset(self) -> None:
+        self.total_s.clear()
+        self.count.clear()
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {stage: {"total_s": self.total_s[stage],
+                        "count": self.count[stage],
+                        "mean_ms": (1e3 * self.total_s[stage] /
+                                    max(self.count[stage], 1))}
+                for stage in sorted(self.total_s)}

@@ -1,14 +1,24 @@
-"""Segment protocol (paper §II.C.1).
+"""Segment protocol (paper §II.C.1) and the per-request descriptor.
 
-Requests are split into fixed-size segments; only small integer segment ids
-flow through the FIFO queues while the sample bytes live in the shared X
+Requests are split into fixed-size segments; only small descriptors flow
+through the FIFO queues while the sample bytes live in the request's input
 buffer.  Special ids: ``SHUTDOWN`` asks a worker to exit; workers emit
 ``Message(OOM/READY, ...)`` sentinels to the prediction accumulator.
+
+Hot-path extensions (DESIGN.md §3):
+  * every in-flight request owns a :class:`Request` descriptor carrying a
+    *versioned* input buffer — a new request never reallocates a buffer a
+    worker may still be reading (the seed's ``shared_x`` swap race);
+  * messages are tagged with the request id ``rid`` so multiple requests can
+    be in flight at once;
+  * a message with ``m is None`` is a *device partial*: the weighted sum of
+    ``count`` member predictions, pre-combined on one device
+    (DESIGN.md §4) — the accumulator just adds it into Y.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -33,11 +43,41 @@ def end(s: int, segment_size: int, nb_samples: int) -> int:
 
 @dataclass
 class Message:
-    """The {s, m, P} triplet (paper §II.C.2).  Sentinels use P=None."""
+    """The {s, m, P} triplet (paper §II.C.2), tagged with the request id.
+
+    ``m is None`` (with ``s >= 0``) marks a device-partial message whose P
+    already folds ``count`` weighted member predictions.  Sentinels use
+    P=None."""
     s: int                       # segment id (or OOM / READY)
-    m: Optional[int]             # model id
+    m: Optional[int]             # model id; None = device partial
     P: Optional[np.ndarray]      # (end(s)-start(s), C) prediction matrix
+    rid: int = 0                 # request id
+    count: int = 1               # member contributions folded into P
 
     @property
     def is_sentinel(self) -> bool:
         return self.s < 0
+
+
+@dataclass
+class Request:
+    """One in-flight predict() call.
+
+    ``x`` is the request's own input buffer (rows ``[:n]`` valid).  Workers
+    slice it zero-copy; because the buffer belongs to the request — not the
+    system — growing a later request can never invalidate it mid-flight."""
+    rid: int
+    x: np.ndarray                       # (capacity >= n, seq) int32
+    n: int                              # valid samples
+    num_classes: int
+    segment_size: int
+    members: List[int]                  # active ensemble members
+    weights: Dict[int, float]           # member -> normalized combine weight
+    combine: str = "mean"
+
+    def num_segments(self) -> int:
+        return num_segments(self.n, self.segment_size)
+
+    def bounds(self, s: int):
+        return (start(s, self.segment_size),
+                end(s, self.segment_size, self.n))

@@ -6,12 +6,25 @@ allocation matrix A on calibration samples.
 
 Processes (threads here — DESIGN.md §2): the *segment ids broadcaster*, the
 *worker pool* and the *prediction accumulator*, wired by thread-safe FIFO
-queues; sample bytes live in the shared X buffer, only integer segment ids
-travel through queues.
+queues; sample bytes live in per-request input buffers, only small segment
+descriptors travel through queues.
+
+Hot-path architecture (DESIGN.md §§3-5):
+  * every request owns a pooled input buffer (versioned swap — growing a
+    later request can never invalidate a buffer workers still read);
+  * (segment, model) pairs are striped round-robin across a model's
+    data-parallel instances, which makes per-device contribution counts
+    deterministic and enables the device-resident partial combine
+    (``device_combine=True``): one accumulator message per device per
+    segment instead of one per member per segment;
+  * requests are tagged with ids and pipelined — up to ``max_in_flight``
+    ``predict_async()`` calls overlap instead of serializing on the
+    accumulator.
 """
 from __future__ import annotations
 
 import queue
+import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -19,9 +32,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.allocation import AllocationMatrix
-from repro.serving import segments as seg
-from repro.serving.accumulator import PredictionAccumulator
-from repro.serving.segments import DEFAULT_SEGMENT_SIZE, SHUTDOWN, Message
+from repro.serving.accumulator import PredictionAccumulator, RequestHandle
+from repro.serving.combiner import DeviceCombiner
+from repro.serving.metrics import StageTimers
+from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, SHUTDOWN, Message,
+                                    Request)
 from repro.serving.worker import Worker
 
 
@@ -35,35 +50,52 @@ class InferenceSystem:
                  frontends: Optional[Dict[int, np.ndarray]] = None,
                  max_seq: int = 128,
                  use_kernel: bool = False,
-                 ready_timeout: float = 300.0):
+                 ready_timeout: float = 300.0,
+                 device_combine: bool = True,
+                 max_in_flight: int = 4):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
         self.segment_size = segment_size
+        self.max_seq = max_seq
+        self.combine = combine
+        self.device_combine = device_combine
+        self.max_in_flight = max(1, max_in_flight)
         self.M = len(self.cfgs)
         classes = {c.vocab_size for c in self.cfgs}
         if len(classes) != 1:
             raise ValueError(f"ensemble members disagree on class count: {classes}")
         self.num_classes = classes.pop()
 
-        # shared memory X buffer (paper: the heavy bytes live here, readable
-        # by every worker; queues carry only segment ids)
-        self.shared_x = np.zeros((segment_size, max_seq), np.int32)
-
+        self.timers = StageTimers()
         self.prediction_queue: "queue.Queue[Message]" = queue.Queue()
-        self.model_queues: List[queue.Queue] = [queue.Queue() for _ in self.cfgs]
         self.accumulator = PredictionAccumulator(
-            self.prediction_queue, self.M, combine=combine, weights=weights)
+            self.prediction_queue, self.M, combine=combine, weights=weights,
+            timers=self.timers, on_complete=self._on_request_complete)
 
+        # request submission / in-flight window / buffer pool
+        self._submit_lock = threading.Lock()
+        self._pool_lock = threading.Lock()
+        self._buffer_pool: List[np.ndarray] = []
+        self._inflight = threading.BoundedSemaphore(self.max_in_flight)
+        self._next_rid = 0
+
+        self.combiners: Dict[int, DeviceCombiner] = {}
         self.workers: List[Worker] = []
+        self._instances: Dict[int, List[Worker]] = {m: [] for m in range(self.M)}
         frontends = frontends or {}
         for d, m, batch in alloc.workers():
+            if device_combine and d not in self.combiners:
+                self.combiners[d] = DeviceCombiner(
+                    f"d{d}", self.prediction_queue, timers=self.timers)
             w = Worker(f"w{d}.{m}", self.cfgs[m], params_list[m],
                        alloc.devices[d], batch,
-                       self.model_queues[m], self.prediction_queue, m,
-                       self.shared_x, segment_size, fake=fake,
-                       frontend=frontends.get(m), use_kernel=use_kernel)
+                       queue.Queue(), self.prediction_queue, m,
+                       max_seq, segment_size, fake=fake,
+                       frontend=frontends.get(m), use_kernel=use_kernel,
+                       combiner=self.combiners.get(d), timers=self.timers)
             self.workers.append(w)
+            self._instances[m].append(w)
 
         self.accumulator.expect_ready(len(self.workers))
         self.accumulator.start()
@@ -73,52 +105,117 @@ class InferenceSystem:
             raise TimeoutError("workers failed to initialize")
         self._shutdown = False
 
+    # ---- per-request input buffers (versioned swap) --------------------------
+    def _take_buffer(self, n: int, width: int) -> np.ndarray:
+        with self._pool_lock:
+            for i, b in enumerate(self._buffer_pool):
+                if b.shape[0] >= n and b.shape[1] == width:
+                    return self._buffer_pool.pop(i)
+        return np.zeros((max(n, self.segment_size), width), np.int32)
+
+    def _on_request_complete(self, handle: RequestHandle) -> None:
+        for c in self.combiners.values():
+            c.finish(handle.req.rid)
+        with self._pool_lock:
+            if len(self._buffer_pool) <= self.max_in_flight:
+                self._buffer_pool.append(handle.req.x)
+        self._inflight.release()
+
+    def _request_weights(self, members: List[int]) -> Dict[int, float]:
+        """Per-member combine weights, normalized over the active subset
+        (paper §I.B "ensemble selection")."""
+        if self.combine == "vote":
+            return {m: 1.0 / len(members) for m in members}
+        base = self.accumulator.weights
+        wsum = float(base[members].sum())
+        return {m: float(base[m]) / max(wsum, 1e-12) for m in members}
+
     # ---- the segment ids broadcaster -----------------------------------------
-    def _broadcast(self, X: np.ndarray, members=None):
-        n = X.shape[0]
-        if X.shape[0] > self.shared_x.shape[0] or X.shape[1] != self.shared_x.shape[1]:
-            self.shared_x = np.zeros((max(n, self.shared_x.shape[0]), X.shape[1]),
-                                     np.int32)
-            for w in self.workers:
-                w.shared_x = self.shared_x
-        self.shared_x[:n] = X
+    def _broadcast(self, X: np.ndarray, members=None) -> RequestHandle:
+        n, width = X.shape
         members = list(range(self.M)) if members is None else list(members)
-        self.accumulator.begin(n, self.num_classes, self.segment_size, members)
-        for s in range(seg.num_segments(n, self.segment_size)):
-            for m in members:
-                self.model_queues[m].put((s, n))
+        if any(m < 0 or m >= self.M for m in members):
+            raise ValueError(f"member ids out of range: {members}")
+        self._inflight.acquire()          # bounded in-flight window
+        try:
+            return self._submit(X, n, width, members)
+        except BaseException:
+            self._inflight.release()      # a failed submit must not leak a slot
+            raise
+
+    def _submit(self, X: np.ndarray, n: int, width: int,
+                members: List[int]) -> RequestHandle:
+        with self._submit_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            buf = self._take_buffer(n, width)
+            buf[:n] = X
+            req = Request(rid, buf, n, self.num_classes, self.segment_size,
+                          members, self._request_weights(members), self.combine)
+            handle = self.accumulator.begin(req)
+            # static striping: (s, m) -> one instance; makes per-device
+            # contribution counts deterministic for the partial combine
+            plan = []
+            for s in range(req.num_segments()):
+                for m in members:
+                    inst = self._instances[m]
+                    plan.append((inst[s % len(inst)], s))
+            if self.combiners:
+                expected: Dict[int, list] = {}
+                for w, s in plan:
+                    comb, exp = expected.setdefault(id(w.combiner),
+                                                    [w.combiner, {}])
+                    exp[s] = exp.get(s, 0) + 1
+                for comb, exp in expected.values():
+                    comb.begin(req, exp)
+            for w, s in plan:
+                w.input_queue.put((req, s))
+        return handle
 
     # ---- modes -----------------------------------------------------------------
+    def predict_async(self, X: np.ndarray, members=None) -> RequestHandle:
+        """Submit a request without waiting; overlaps with other in-flight
+        requests up to ``max_in_flight``.  Returns a handle with
+        ``result(timeout)``."""
+        if self._shutdown:
+            raise RuntimeError("system is shut down")
+        return self._broadcast(np.asarray(X, np.int32), members)
+
     def predict(self, X: np.ndarray, timeout: float = 600.0,
                 members=None) -> np.ndarray:
         """Deploy Mode.  ``members``: optional model-id subset (paper §I.B
         "ensemble selection" — e.g. a faster accuracy/speed trade-off)."""
-        self._broadcast(np.asarray(X, np.int32), members)
-        Y = self.accumulator.wait(timeout)
-        if self.accumulator.oom.is_set():
+        handle = self.predict_async(X, members)
+        try:
+            return handle.result(timeout)
+        except MemoryError:
             self.shutdown()
-            raise MemoryError("a worker reported OOM ({-1, None, None})")
-        return Y
+            raise
 
     def benchmark(self, X: np.ndarray, repeats: int = 1,
                   timeout: float = 600.0):
-        """Benchmark Mode: returns (Y, throughput samples/sec)."""
+        """Benchmark Mode: returns (Y, throughput samples/sec).  Repeats are
+        issued through the in-flight window, so the pipeline stays full."""
         X = np.asarray(X, np.int32)
         Y = self.predict(X, timeout)          # warm the path once
         t0 = time.perf_counter()
-        for _ in range(repeats):
-            self._broadcast(X)
-            Y = self.accumulator.wait(timeout)
+        handles = [self.predict_async(X) for _ in range(repeats)]
+        for h in handles:
+            Y = h.result(timeout)
         dt = time.perf_counter() - t0
         return Y, repeats * X.shape[0] / dt
+
+    def stage_timings(self) -> Dict[str, Dict[str, float]]:
+        """Per-stage wall-clock counters (batcher wait / fill / predict /
+        transfer / combine / accumulate) since construction or reset."""
+        return self.timers.snapshot()
 
     def shutdown(self):
         if self._shutdown:
             return
         self._shutdown = True
-        for m, q in enumerate(self.model_queues):
-            for _ in [w for w in self.workers if w.model_idx == m]:
-                q.put(SHUTDOWN)
+        for w in self.workers:
+            w.input_queue.put(SHUTDOWN)
         for w in self.workers:
             w.join()
         self.accumulator.stop()

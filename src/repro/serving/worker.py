@@ -4,18 +4,34 @@ Faithful to paper Fig. 2 — three asynchronous threads per worker:
   * the *batcher* turns incoming segment ids into padded batches,
   * the *predictor* owns the params on its device and runs the jitted step,
   * the *prediction sender* reassembles batch outputs into segment
-    predictions and posts the {s, m, P} message.
+    predictions and forwards them (device partial or {s, m, P} message).
 
 Hardware adaptation (DESIGN.md §2): the paper uses one OS process per worker
 (TF1 sessions hold the GIL); with JAX, XLA executions release the GIL and
 dispatch is asynchronous, so threads + per-worker queues give the same
 overlap without IPC serialization overhead.
+
+Hot-path mechanics (DESIGN.md §3):
+  * the batcher writes each segment into a **preallocated ring** of
+    segment-span slots with one vectorized fill — batches are offset views
+    into the slot, so there is no per-chunk allocation or
+    ``np.concatenate``-padding; slot backpressure (a free-list queue) bounds
+    in-flight memory, and a slot is recycled only after the predictor's
+    output is materialized — on CPU ``device_put`` may alias host memory, so
+    early reuse would corrupt an in-flight batch;
+  * short remainder chunks are padded to the next **power-of-two bucket**
+    (not the full compiled batch) — one jitted callable serves every bucket,
+    with jit's shape cache bounding compilations to ~log2(batch) entries, and
+    input buffers are donated on accelerators so XLA can reuse them;
+  * per-stage wall-clock counters (metrics.StageTimers) instrument the
+    batcher wait, batch fill, predict dispatch, and device sync/transfer.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Optional
+import time
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,45 +39,73 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.devices import DeviceSpec
+from repro.kernels.ops import pow2_clamp
 from repro.serving import segments as seg
-from repro.serving.segments import Message, SHUTDOWN
+from repro.serving.metrics import StageTimers
+from repro.serving.segments import Message, Request, SHUTDOWN
+
+MIN_BUCKET = 8
 
 
-def make_predict_fn(cfg: ModelConfig, use_kernel: bool = False) -> Callable:
+def bucket_for(n: int, batch_size: int) -> int:
+    """Compiled batch shape for an ``n``-row chunk: the full batch size, or
+    the next power of two >= n (min 8) for remainder chunks."""
+    if n >= batch_size:
+        return batch_size
+    return pow2_clamp(n, MIN_BUCKET, batch_size)
+
+
+def make_predict_fn(cfg: ModelConfig, use_kernel: bool = False,
+                    donate: bool = False) -> Callable:
     """Classification-style serving fn: tokens (b,S) -> last-token class
-    scores (b, C) with C = the unpadded vocab (the paper's f(x)->y)."""
+    scores (b, C) with C = the unpadded vocab (the paper's f(x)->y).
+    ``donate`` hands the token buffer to XLA for reuse (accelerators only —
+    CPU ignores donation and would warn on every compile)."""
     from repro.models import forward
 
     def predict(params, tokens, frontend):
         logits, _ = forward(params, cfg, tokens, frontend, use_kernel=use_kernel)
         return logits[:, -1, :cfg.vocab_size]
 
-    return jax.jit(predict)
+    return jax.jit(predict, donate_argnums=(1,) if donate else ())
 
 
 class Worker:
     def __init__(self, worker_id: str, cfg: ModelConfig, params,
                  device: DeviceSpec, batch_size: int,
-                 input_queue: "queue.Queue[int]",
+                 input_queue: "queue.Queue",
                  prediction_queue: "queue.Queue[Message]",
-                 model_idx: int, shared_x: np.ndarray, segment_size: int,
+                 model_idx: int, max_seq: int, segment_size: int,
                  *, fake: bool = False, frontend: Optional[np.ndarray] = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, combiner=None,
+                 timers: Optional[StageTimers] = None):
         self.worker_id = worker_id
         self.cfg = cfg
         self.batch_size = batch_size
         self.model_idx = model_idx
         self.input_queue = input_queue
         self.prediction_queue = prediction_queue
-        self.shared_x = shared_x
         self.segment_size = segment_size
         self.fake = fake
         self.device = device
+        self.combiner = combiner
+        self.timers = timers or StageTimers()
         self.num_classes = cfg.vocab_size
         self._batch_q: "queue.Queue" = queue.Queue(maxsize=4)
         self._send_q: "queue.Queue" = queue.Queue(maxsize=8)
-        self._threads = []
+        self._threads: List[threading.Thread] = []
         self._jax_device = device.jax_devices[0] if device.jax_devices else None
+
+        # preallocated input ring: one segment-span slot per entry (chunks are
+        # offset views into the slot), 4 deep so later segments batch while
+        # earlier ones predict
+        chunks_per_seg = max(1, -(-segment_size // batch_size))
+        self._span = chunks_per_seg * batch_size
+        self._ring = [np.zeros((self._span, max_seq), np.int32)
+                      for _ in range(4)]
+        self._free_slots: "queue.Queue[int]" = queue.Queue()
+        for i in range(len(self._ring)):
+            self._free_slots.put(i)
 
         try:
             if self._jax_device is not None:
@@ -72,9 +116,10 @@ class Worker:
                 fe = frontend if frontend is not None else np.zeros(
                     (batch_size, cfg.frontend_tokens, cfg.fdim), np.float32)
                 self.frontend = jnp.asarray(fe)
-            self.predict_fn = make_predict_fn(cfg, use_kernel)
+            donate = jax.default_backend() in ("gpu", "tpu")
+            self.predict_fn = make_predict_fn(cfg, use_kernel, donate=donate)
             if not fake:   # warm-up compile so READY means actually servable
-                warm = jnp.zeros((batch_size, shared_x.shape[1]), jnp.int32)
+                warm = jnp.zeros((batch_size, max_seq), jnp.int32)
                 np.asarray(self.predict_fn(self.params, warm, self.frontend))
             self.prediction_queue.put(Message(seg.READY, model_idx, None))
         except (MemoryError, RuntimeError, ValueError):
@@ -86,63 +131,113 @@ class Worker:
     def start(self):
         for fn, name in [(self._batcher, "batcher"), (self._predictor, "predictor"),
                          (self._sender, "sender")]:
-            t = threading.Thread(target=fn, name=f"{self.worker_id}-{name}",
-                                 daemon=True)
+            t = threading.Thread(target=self._guarded, args=(fn,),
+                                 name=f"{self.worker_id}-{name}", daemon=True)
             t.start()
             self._threads.append(t)
+
+    def _guarded(self, fn):
+        """A stage thread dying mid-request would hang its request (and leak
+        its in-flight window slot) forever — convert runtime failures into
+        the paper's {-1, None, None} sentinel, which fails every in-flight
+        request and shuts the system down."""
+        try:
+            fn()
+        except BaseException:
+            self.prediction_queue.put(Message(seg.OOM, None, None))
+            raise
 
     def join(self, timeout: float = 30.0):
         for t in self._threads:
             t.join(timeout)
 
+    # ---- stage 1: batcher ----------------------------------------------------
     def _batcher(self):
         while True:
+            t0 = time.perf_counter()
             item = self.input_queue.get()
+            t0 = self.timers.timed("batcher_wait", t0)
             if item == SHUTDOWN:
                 self._batch_q.put(None)
                 return
-            s, nb_samples = item              # (segment id, request size)
-            lo = seg.start(s, self.segment_size)
-            hi = seg.end(s, self.segment_size, nb_samples)
-            data = self.shared_x[lo:hi]
-            batches = []
-            for i in range(0, len(data), self.batch_size):
-                chunk = data[i:i + self.batch_size]
-                n = len(chunk)
-                if n < self.batch_size:        # pad to the compiled shape
-                    chunk = np.concatenate(
-                        [chunk, np.zeros((self.batch_size - n,) + chunk.shape[1:],
-                                         chunk.dtype)])
-                batches.append((chunk, n))
-            self._batch_q.put((s, hi - lo, batches))
+            req, s = item                     # type: Request, int
+            lo, hi = req.bounds(s)
+            data = req.x[lo:hi]               # zero-copy view of the request
+            n = hi - lo
+            if data.shape[1] == self._ring[0].shape[1]:
+                slot = self._free_slots.get()
+                buf = self._ring[slot]
+            else:                  # rare: request seq != compiled ring seq
+                slot, buf = None, np.zeros((self._span, data.shape[1]),
+                                           np.int32)
+            buf[:n] = data                    # one vectorized fill per segment
+            chunks = []                       # (offset, bucket, valid) views
+            for i in range(0, n, self.batch_size):
+                valid = min(self.batch_size, n - i)
+                bucket = bucket_for(valid, self.batch_size)
+                if valid < bucket:
+                    buf[i + valid:i + bucket] = 0     # stale tail rows
+                chunks.append((i, bucket, valid))
+            self._batch_q.put((req, s, slot, buf, chunks))
+            self.timers.timed("batch_fill", t0)
 
+    # ---- stage 2: predictor --------------------------------------------------
     def _predictor(self):
         while True:
             item = self._batch_q.get()
             if item is None:
                 self._send_q.put(None)
                 return
-            s, total, batches = item
-            outs = []
-            for chunk, n in batches:
-                if self.fake:
-                    outs.append((np.zeros((self.batch_size, self.num_classes),
-                                          np.float32), n))
-                    continue
-                x = jnp.asarray(chunk)
-                if self._jax_device is not None:
-                    x = jax.device_put(x, self._jax_device)
-                y = self.predict_fn(self.params, x, self.frontend)
-                outs.append((y, n))            # async dispatch: no block here
-            self._send_q.put((s, total, outs))
+            req, s, slot, buf, chunks = item
+            t0 = time.perf_counter()
+            outs = None
+            if not self.fake:
+                outs = []
+                for off, bucket, valid in chunks:
+                    view = buf[off:off + bucket]
+                    if self._jax_device is not None:
+                        x = jax.device_put(view, self._jax_device)
+                    else:
+                        x = jnp.asarray(view)
+                    fe = (self.frontend[:bucket]
+                          if self.frontend is not None else None)
+                    y = self.predict_fn(self.params, x, fe)
+                    outs.append((valid, y))    # async dispatch: no block here
+            self._send_q.put((req, s, slot, outs))
+            self.timers.timed("predict", t0)
 
+    # ---- stage 3: sender -----------------------------------------------------
     def _sender(self):
+        on_device = self.combiner is not None
         while True:
             item = self._send_q.get()
             if item is None:
                 return
-            s, total, outs = item
-            parts = [np.asarray(y)[:n] for y, n in outs]   # sync point
-            P = np.concatenate(parts, axis=0)
-            assert P.shape[0] == total
-            self.prediction_queue.put(Message(s, self.model_idx, P))
+            req, s, slot, outs = item
+            t0 = time.perf_counter()
+            lo, hi = req.bounds(s)
+            if outs is None:                   # fake predictor: instant zeros
+                P = np.zeros((hi - lo, self.num_classes), np.float32)
+            else:
+                parts = []
+                for valid, y in outs:
+                    if on_device:
+                        y.block_until_ready()  # compute done; stays on device
+                        parts.append(y[:valid])
+                    else:
+                        parts.append(np.asarray(y)[:valid])  # d->h sync
+                if len(parts) == 1:
+                    P = parts[0]
+                elif on_device:
+                    P = jnp.concatenate(parts, axis=0)
+                else:
+                    P = np.concatenate(parts, axis=0)
+                assert P.shape[0] == hi - lo
+            if slot is not None:               # ring slot safe to recycle now
+                self._free_slots.put(slot)
+            self.timers.timed("transfer", t0)
+            if on_device:
+                self.combiner.add(req, s, self.model_idx, P)
+            else:
+                self.prediction_queue.put(Message(s, self.model_idx,
+                                                  np.asarray(P), rid=req.rid))

@@ -105,6 +105,30 @@ def test_ensemble_combine_is_paper_rule():
     np.testing.assert_allclose(np.asarray(out), acc, atol=1e-6)
 
 
+@pytest.mark.parametrize("m,seg,c", COMBINE_CASES)
+def test_ensemble_accumulate(m, seg, c):
+    """The accumulate-into-partial kernel variant == partial + weighted sum."""
+    p = _rand(15, m, seg, c)
+    w = jax.nn.softmax(_rand(16, m))
+    part = _rand(17, seg, c)
+    out = ops.ensemble_accumulate(part, p, w)
+    exp = ref.ensemble_accumulate_ref(part, p, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_ensemble_accumulate_chains():
+    """Folding members one at a time (the device combiner's usage) equals a
+    single fused combine."""
+    m, seg, c = 4, 20, 100                 # non-block-aligned on purpose
+    p = _rand(18, m, seg, c)
+    w = jax.nn.softmax(_rand(19, m))
+    acc = jnp.zeros((seg, c), jnp.float32)
+    for i in range(m):
+        acc = ops.ensemble_accumulate(acc, p[i][None], w[i][None])
+    exp = ref.ensemble_combine_ref(p, w)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(exp), atol=1e-5)
+
+
 def test_kernels_used_by_models_match():
     """flash_attention kernel path == model jnp path inside self-attention."""
     from repro.configs import get_config

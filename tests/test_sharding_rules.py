@@ -12,8 +12,17 @@ from repro.configs import INPUT_SHAPES, list_architectures, get_config
 from repro.models.transformer import param_shapes
 from repro.parallel import sharding as shd
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    """jax moved AbstractMesh to a ((name, size), ...) shape tuple in 0.4.37;
+    accept both call conventions."""
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except (TypeError, ValueError):
+        return AbstractMesh(sizes, names)
+
+
+MESH1 = _abstract_mesh((16, 16), ("data", "model"))
+MESH2 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, entry) -> int:
