@@ -1,17 +1,25 @@
-"""Serving hot-path A/B: seed-style path vs the pipelined zero-copy engine.
+"""Serving hot-path A/B: seed path vs pipelined engine vs coalescing scheduler.
 
-Overhead-dominated regime (paper §IV.A): M=4 fake workers sharing ONE device,
-so prediction costs ~nothing and the measurement isolates the serving machinery
-— batching, queues, transfers, combination.  Compares:
+Overhead-dominated regime (paper §IV.A): fake workers sharing ONE device make
+prediction cost ~nothing, isolating the serving machinery — batching, queues,
+transfers, combination.  Scenarios:
 
-  * ``seed``      per-member messages (``device_combine=False``), one request
-                  in flight (``max_in_flight=1``) — the seed's behavior;
-  * ``pipelined`` device-resident partial combine + multi-request in-flight
-                  window — one accumulator message per device per segment.
+  * ``seed``        per-member messages (``device_combine=False``), one
+                    request in flight — the vendored seed behavior;
+  * ``pipelined``   the PR-1 engine: device-resident partial combine +
+                    multi-request window, but batches formed strictly within
+                    one (request, segment) pair (``coalesce=False``);
+  * ``coalesced``   the PR-2 coalescing scheduler: cross-request continuous
+                    batching with span scatter descriptors;
+  * ``many_small``  the north-star workload — many concurrent requests each
+                    far smaller than a segment, run with REAL (tiny) models
+                    so padding waste costs real compute.  Compares the PR-1
+                    engine against the coalescing scheduler and reports
+                    padding efficiency (valid rows / dispatched rows).
 
-Reports segments/sec, accumulator messages per request, and per-stage timings.
-Acceptance (ISSUE 1): pipelined >= 1.5x seed segments/sec, and messages per
-request drop from M x segments to devices x segments.
+Acceptance (ISSUE 2): many_small coalesced >= 1.5x the PR-1 engine
+segments/sec; single large-request throughput within 5% (the
+``large_request_ratio``); padding efficiency reported in BENCH_serving.json.
 """
 from __future__ import annotations
 
@@ -42,7 +50,7 @@ def _measure(system, X, requests: int, pipelined: bool) -> dict:
         for _ in range(requests):
             system.predict(X)
     dt = time.perf_counter() - t0
-    return {
+    out = {
         "requests": requests,
         "segments_per_request": n_segments,
         "seconds": dt,
@@ -52,9 +60,50 @@ def _measure(system, X, requests: int, pipelined: bool) -> dict:
             (system.accumulator.data_messages - msg0) / requests,
         "stage_timings": system.stage_timings() if pipelined else {},
     }
+    if pipelined:
+        out["counters"] = system.serving_counters()
+        out["padding_efficiency"] = out["counters"]["padding_efficiency"]
+    return out
 
 
-def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4):
+def _measure_many_small(system, Xs, rounds: int) -> dict:
+    """Submit ``rounds`` waves of the small concurrent requests through the
+    in-flight window and measure aggregate segments/sec + padding."""
+    for X in Xs[:4]:                       # warm the small pow2 bucket shapes
+        system.predict(X)
+    system.predict(np.concatenate(Xs, axis=0)[:32])   # warm the full batch
+    system.timers.reset()
+    msg0 = system.accumulator.data_messages
+    n_requests = rounds * len(Xs)
+    n_segments = sum(seg.num_segments(x.shape[0], system.segment_size)
+                     for x in Xs) * rounds
+    n_samples = sum(x.shape[0] for x in Xs) * rounds
+    t0 = time.perf_counter()
+    handles = []
+    for _ in range(rounds):
+        handles.extend(system.predict_async(x) for x in Xs)
+    for h in handles:
+        h.result(600.0)
+    dt = time.perf_counter() - t0
+    counters = system.serving_counters()
+    return {
+        "requests": n_requests,
+        "segments": n_segments,
+        "seconds": dt,
+        "segments_per_sec": n_segments / dt,
+        "samples_per_sec": n_samples / dt,
+        "messages_per_request":
+            (system.accumulator.data_messages - msg0) / n_requests,
+        "padding_efficiency": counters["padding_efficiency"],
+        "counters": counters,
+        "queue_depth": {k: v for k, v in system.serving_gauges().items()
+                        if k.startswith("queue_depth.")},
+        "stage_timings": system.stage_timings(),
+    }
+
+
+def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
+        small_concurrency=48, small_rounds=8, small_max_wait_us=2000):
     import jax
     import repro.models as M
     from repro.serving.system import InferenceSystem
@@ -71,22 +120,57 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4):
     results = {}
     with SeedSystem(cfgs, alloc, max_seq=seq) as system:
         results["seed"] = _measure(system, X, requests, pipelined=False)
-    with InferenceSystem(cfgs, params, alloc, segment_size=128,
-                         max_seq=seq, fake=True, device_combine=True,
-                         max_in_flight=4) as system:
-        results["pipelined"] = _measure(system, X, requests, pipelined=True)
+    for name, coalesce in (("pipelined", False), ("coalesced", True)):
+        with InferenceSystem(cfgs, params, alloc, segment_size=128,
+                             max_seq=seq, fake=True, device_combine=True,
+                             max_in_flight=4, coalesce=coalesce) as system:
+            results[name] = _measure(system, X, requests, pipelined=True)
 
-    speedup = (results["pipelined"]["segments_per_sec"] /
-               results["seed"]["segments_per_sec"])
-    results["speedup"] = speedup
+    results["speedup"] = (results["pipelined"]["segments_per_sec"] /
+                          results["seed"]["segments_per_sec"])
+    # single large requests: coalescing must not regress the PR-1 engine
+    results["large_request_ratio"] = (
+        results["coalesced"]["segments_per_sec"] /
+        results["pipelined"]["segments_per_sec"])
+
+    # ---- many-small-requests: the north-star workload (real tiny models) ----
+    small_cfgs = cfgs[:2]
+    small_params = params[:2]
+    A_small = np.full((1, len(small_cfgs)), 16)
+    alloc_small = AllocationMatrix(devs, [c.name for c in small_cfgs], A_small)
+    sizes = [1, 2, 3, 4, 6]                 # all <= segment_size/2 = 32
+    srng = np.random.default_rng(1)
+    Xs = [srng.integers(0, 512, (sizes[i % len(sizes)], seq)).astype(np.int32)
+          for i in range(small_concurrency)]
+    many = {}
+    for name, coalesce in (("pipelined", False), ("coalesced", True)):
+        with InferenceSystem(small_cfgs, small_params, alloc_small,
+                             segment_size=64, max_seq=seq,
+                             device_combine=True, coalesce=coalesce,
+                             max_in_flight=small_concurrency,
+                             max_wait_us=small_max_wait_us) as system:
+            many[name] = _measure_many_small(system, Xs, small_rounds)
+    many["speedup"] = (many["coalesced"]["segments_per_sec"] /
+                       many["pipelined"]["segments_per_sec"])
+    results["many_small"] = many
+
     if csv:
         print("serving_hotpath:variant,segments_per_sec,messages_per_request")
-        for name in ("seed", "pipelined"):
+        for name in ("seed", "pipelined", "coalesced"):
             r = results[name]
             print(f"serving_hotpath:{name},{r['segments_per_sec']:.1f},"
                   f"{r['messages_per_request']:.1f}")
-        print(f"serving_hotpath:speedup,{speedup:.2f},")
-        for name in ("seed", "pipelined"):
+        print(f"serving_hotpath:speedup,{results['speedup']:.2f},")
+        print(f"serving_hotpath:large_request_ratio,"
+              f"{results['large_request_ratio']:.3f},")
+        for name in ("pipelined", "coalesced"):
+            r = many[name]
+            print(f"serving_hotpath:many_small.{name},"
+                  f"{r['segments_per_sec']:.1f},{r['messages_per_request']:.1f}")
+            print(f"serving_hotpath:many_small.{name}.padding_efficiency,"
+                  f"{r['padding_efficiency']:.3f},")
+        print(f"serving_hotpath:many_small.speedup,{many['speedup']:.2f},")
+        for name in ("pipelined", "coalesced"):
             for stage, t in results[name]["stage_timings"].items():
                 print(f"serving_hotpath:{name}.{stage},"
                       f"{t['total_s']:.4f},{t['count']}")

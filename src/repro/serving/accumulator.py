@@ -5,12 +5,19 @@ per-request ensemble prediction.  Two message kinds (DESIGN.md §§3-4):
 
   * **device partials** (``m is None``): already-weighted sums of ``count``
     member predictions, pre-combined on one device — the fold is just
-    ``Y[start(s):end(s)] += P`` and the bookkeeping debits ``count``;
+    ``Y[start(s):end(s)] += P``;
   * **per-member messages** (legacy path, ``device_combine=False``): the
     paper's {s, m, P} triplet, folded under the request's combine rule —
     "mean"/"weighted" (``Y += w_m P``), "vote" (majority voting on argmax),
     or "pallas" (buffer the segment's M member predictions, then fuse the
     weighted combine in the ensemble_combine Pallas kernel, DESIGN.md §7.4).
+
+Under the coalescing scheduler one member's segment may arrive split across
+several messages (each tagged with ``row_lo``), so completion accounting
+counts **rows, not messages**: a request owes ``n × len(members)``
+member-rows, a per-member message debits ``len(P)`` rows, and a device
+partial debits ``count × segment_rows``.  The total is invariant to how the
+batcher packed the spans.
 
 Every message carries a request id, so any number of requests can be in
 flight; each ``begin()`` returns a :class:`RequestHandle` the caller waits
@@ -37,11 +44,13 @@ class RequestHandle:
     def __init__(self, req: Request):
         self.req = req
         self.Y = np.zeros((req.n, req.num_classes), np.float32)
-        self.remaining = req.num_segments() * len(req.members)
+        # member-rows still owed: every member predicts every row exactly once
+        self.remaining = req.n * len(req.members)
         self.done = threading.Event()
         self.error: Optional[BaseException] = None
         self.messages = 0                     # data messages folded
         self._seg_buffers: Dict[int, Dict[int, np.ndarray]] = {}
+        self._seg_rows: Dict[int, int] = {}   # pallas path: rows buffered
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         if not self.done.wait(timeout):
@@ -155,31 +164,48 @@ class PredictionAccumulator:
         self.data_messages += 1
         handle.messages += 1
         if msg.m is None:
-            # device partial: weights already applied on-device
+            # device partial: weights already applied on-device; the combiner
+            # flushes full segments, so this debits count x segment rows
             handle.Y[lo:hi] += msg.P
-            handle.remaining -= msg.count
+            handle.remaining -= msg.count * (hi - lo)
         else:
             self._fold_member(handle, msg, lo, hi)
-            handle.remaining -= 1
+            handle.remaining -= int(msg.P.shape[0])
         self.timers.add("accumulate", time.perf_counter() - t0)
         if handle.remaining == 0:
             self._finish(handle)
 
     def _fold_member(self, handle: RequestHandle, msg: Message,
                      lo: int, hi: int):
+        """Fold a per-member span message: rows ``[row_lo, row_lo+len(P))``
+        of segment ``s``, i.e. request rows ``[lo+row_lo, ...)``."""
         req = handle.req
         w = req.weights[msg.m]
+        a = lo + msg.row_lo
+        b = a + int(msg.P.shape[0])
         if req.combine in ("mean", "weighted"):
             # the paper's one-liner: Y[start:end] += P / M (weighted form)
-            handle.Y[lo:hi] += msg.P * w
+            handle.Y[a:b] += msg.P * w
         elif req.combine == "vote":
-            onehot = np.zeros_like(handle.Y[lo:hi])
-            onehot[np.arange(hi - lo), msg.P.argmax(axis=1)] = w
-            handle.Y[lo:hi] += onehot
+            onehot = np.zeros_like(handle.Y[a:b])
+            onehot[np.arange(b - a), msg.P.argmax(axis=1)] = w
+            handle.Y[a:b] += onehot
         elif req.combine == "pallas":
+            # spans buffer into per-(segment, member) staging rows; the fused
+            # kernel runs once all members' rows for the segment are present.
+            # Whole-segment messages (the common case — senders reassemble
+            # spans) store by reference instead of paying an alloc + copy.
             buf = handle._seg_buffers.setdefault(msg.s, {})
-            buf[msg.m] = msg.P
-            if len(buf) == len(req.members):
+            if msg.row_lo == 0 and msg.P.shape[0] == hi - lo:
+                buf[msg.m] = msg.P
+            else:
+                arr = buf.get(msg.m)
+                if arr is None:
+                    arr = buf[msg.m] = np.zeros((hi - lo, req.num_classes),
+                                                np.float32)
+                arr[msg.row_lo:msg.row_lo + msg.P.shape[0]] = msg.P
+            got = self._seg_rows_add(handle, msg.s, int(msg.P.shape[0]))
+            if got == (hi - lo) * len(req.members):
                 from repro.kernels import ops as kops
                 import jax.numpy as jnp
                 stacked = jnp.asarray(np.stack([buf[m] for m in req.members]))
@@ -187,5 +213,12 @@ class PredictionAccumulator:
                                           np.float32))
                 handle.Y[lo:hi] = np.asarray(kops.ensemble_combine(stacked, wv))
                 del handle._seg_buffers[msg.s]
+                del handle._seg_rows[msg.s]
         else:
             raise ValueError(f"unknown combine rule {req.combine!r}")
+
+    @staticmethod
+    def _seg_rows_add(handle: RequestHandle, s: int, rows: int) -> int:
+        got = handle._seg_rows.get(s, 0) + rows
+        handle._seg_rows[s] = got
+        return got

@@ -6,17 +6,22 @@ shared per-(request, segment) partial *on the device* and post **one**
 one {s, m, P} message (and one device->host transfer) per member.  With M
 members sharing a device this cuts accumulator traffic by up to M×.
 
-How the flush trigger stays deterministic: the broadcaster assigns every
-(segment, model) pair to a *specific* worker instance (round-robin striping
-across data-parallel instances, system.py), so at ``begin()`` time the system
-knows exactly how many member contributions each device will produce for each
-segment.  The combiner flushes a segment the moment its count is reached.
+How the flush trigger stays deterministic under coalescing: the broadcaster
+assigns every (segment, model) pair to a *specific* worker instance
+(round-robin striping across data-parallel instances, system.py), so at
+``begin()`` time the system knows exactly how many member contributions each
+device will produce for each segment.  The coalescing batcher may split one
+member's segment across several batches, so contributions arrive as
+row-ranges — the combiner therefore counts **rows, not messages**: a segment
+flushes the moment ``members_on_device × segment_rows`` rows have been
+folded, which is reached exactly once however the spans were packed.
 
 Combination rules are applied member-side, so the partial is always additive:
-  mean/weighted  partial += w_m · P_m
-  vote           partial += w_vote · onehot(argmax P_m)
-  pallas         partial  = ensemble_combine(P_m[None], [w_m], partial) — the
-                 accumulate-into-partial Pallas kernel variant
+  mean/weighted  partial[lo:hi] += w_m · P_m[lo:hi]
+  vote           partial[lo:hi] += w_vote · onehot(argmax P_m[lo:hi])
+  pallas         partial[lo:hi]  = ensemble_combine(P_m[None], [w_m],
+                 partial[lo:hi]) — the accumulate-into-partial Pallas kernel
+                 variant, applied to the span's rows
 and the accumulator's per-message work collapses to ``Y[lo:hi] += partial``.
 """
 from __future__ import annotations
@@ -33,11 +38,11 @@ from repro.serving.segments import Message, Request
 
 
 class _SegPartial:
-    __slots__ = ("acc", "got")
+    __slots__ = ("acc", "rows")
 
     def __init__(self):
         self.acc = None        # np.ndarray or jax.Array (device-resident)
-        self.got = 0
+        self.rows = 0          # member-rows folded so far
 
 
 class DeviceCombiner:
@@ -51,17 +56,20 @@ class DeviceCombiner:
         self.prediction_queue = prediction_queue
         self.timers = timers
         self._lock = threading.Lock()
-        # rid -> {s: expected contribution count} (segments with count > 0)
-        self._expected: Dict[int, Dict[int, int]] = {}
+        # rid -> {s: (member contributions, expected member-rows)}
+        self._expected: Dict[int, Dict[int, Tuple[int, int]]] = {}
         self._parts: Dict[Tuple[int, int], _SegPartial] = {}
         self.partials_posted = 0
 
     # ---- request lifecycle ---------------------------------------------------
     def begin(self, req: Request, expected: Dict[int, int]) -> None:
         """Register how many member contributions each segment of ``req``
-        will see on this device."""
+        will see on this device.  The flush trigger is row-based: segment
+        ``s`` completes after ``expected[s] * (end(s)-start(s))`` rows."""
         with self._lock:
-            self._expected[req.rid] = {s: n for s, n in expected.items() if n}
+            self._expected[req.rid] = {
+                s: (n, n * (req.bounds(s)[1] - req.bounds(s)[0]))
+                for s, n in expected.items() if n}
 
     def finish(self, rid: int) -> None:
         """Drop any state for a completed/failed request (idempotent)."""
@@ -71,14 +79,15 @@ class DeviceCombiner:
                 del self._parts[key]
 
     # ---- the fold ------------------------------------------------------------
-    def add(self, req: Request, s: int, m: int, P) -> None:
-        """Fold member ``m``'s segment-``s`` prediction into the device
-        partial; post the partial once the segment's expected count is
-        reached.  ``P`` may be a numpy array (fake workers) or a device
-        array — device arrays stay resident until the single flush
-        transfer."""
+    def add(self, req: Request, s: int, m: int, P, row_lo: int = 0) -> None:
+        """Fold member ``m``'s rows ``[row_lo, row_lo+len(P))`` of segment
+        ``s`` into the device partial; post the partial once the segment's
+        expected row count is reached.  ``P`` may be a numpy array (fake
+        workers) or a device array — device arrays stay resident until the
+        single flush transfer."""
         t0 = time.perf_counter()
         flush = None
+        nrows = int(P.shape[0])
         # the heavy elementwise math runs outside the lock; only the
         # accumulate + bookkeeping is serialized
         contrib = self._contribution(req, P, req.weights[m])
@@ -87,18 +96,21 @@ class DeviceCombiner:
             if expected is None or s not in expected:   # request torn down
                 return
             part = self._parts.setdefault((req.rid, s), _SegPartial())
-            part.acc = self._fold(req, part.acc, contrib, req.weights[m])
-            part.got += 1
-            if part.got >= expected[s]:
-                flush = part
+            part.acc = self._fold(req, part.acc, contrib, req.weights[m],
+                                  s, row_lo)
+            part.rows += nrows
+            count, want_rows = expected[s]
+            if part.rows >= want_rows:
+                flush = (part, count)
                 del self._parts[(req.rid, s)]
                 del expected[s]
                 if not expected:
                     del self._expected[req.rid]
         if flush is not None:
             # the single device->host transfer per device per segment
+            part, count = flush
             self.prediction_queue.put(Message(
-                s, None, np.asarray(flush.acc), rid=req.rid, count=flush.got))
+                s, None, np.asarray(part.acc), rid=req.rid, count=count))
             self.partials_posted += 1
         if self.timers is not None:
             self.timers.add("combine", time.perf_counter() - t0)
@@ -122,19 +134,28 @@ class DeviceCombiner:
         return P * np.float32(w)
 
     @staticmethod
-    def _fold(req: Request, acc, contrib, w: float):
-        if req.combine == "pallas" and not isinstance(contrib, np.ndarray):
-            import jax.numpy as jnp
-            from repro.kernels import ops as kops
+    def _fold(req: Request, acc, contrib, w: float, s: int, row_lo: int):
+        """Fold a span contribution into the full-segment partial at its row
+        offset.  The partial is allocated once per (request, segment) at the
+        segment's full row count, host- or device-side matching the first
+        contribution."""
+        lo, hi = req.bounds(s)
+        seg_rows = hi - lo
+        a, b = row_lo, row_lo + int(contrib.shape[0])
+        if isinstance(contrib, np.ndarray):
             if acc is None:
-                acc = jnp.zeros(contrib.shape, jnp.float32)
-            # the accumulate-into-partial Pallas kernel variant
-            return kops.ensemble_accumulate(
-                acc, contrib[None].astype(jnp.float32),
-                jnp.full((1,), w, jnp.float32))
-        if acc is None:
-            return contrib
-        if isinstance(acc, np.ndarray):
-            acc += contrib                     # in-place: no temp per fold
+                acc = np.zeros((seg_rows, req.num_classes), np.float32)
+            acc[a:b] += contrib                # in-place: no temp per fold
             return acc
-        return acc + contrib
+        import jax.numpy as jnp
+        if acc is None:
+            acc = jnp.zeros((seg_rows, req.num_classes), jnp.float32)
+        if req.combine == "pallas":
+            from repro.kernels import ops as kops
+            # the accumulate-into-partial Pallas kernel variant, on the span
+            upd = kops.ensemble_accumulate(
+                acc[a:b], contrib[None].astype(jnp.float32),
+                jnp.full((1,), w, jnp.float32))
+            return acc.at[a:b].set(upd) if (a, b) != (0, seg_rows) else upd
+        return acc.at[a:b].add(contrib) if (a, b) != (0, seg_rows) \
+            else acc + contrib

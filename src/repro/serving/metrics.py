@@ -1,11 +1,22 @@
-"""Per-stage timing counters for the serving hot path (DESIGN.md §6).
+"""Per-stage timing counters + serving gauges for the hot path (DESIGN.md §6).
 
 Stages (one wall-clock accumulator each, shared by all threads):
   ``batcher_wait``   time a batcher spends blocked on its input queue,
-  ``batch_fill``     copying segment rows into ring-buffer slots,
+  ``batch_fill``     copying request rows into coalesced batch slots,
   ``predict``        jitted-step dispatch (async — excludes device time),
   ``transfer``       device sync + device->host fetch in the sender,
   ``combine``        device-partial / accumulator fold time.
+
+Counters (monotonic sums) instrument the coalescing scheduler:
+  ``rows_valid``       request rows dispatched to the device,
+  ``rows_dispatched``  rows actually sent including bucket padding,
+  ``batches``          compiled-batch dispatches,
+  ``spans``            (request, segment, row-range) spans packed into
+                       batches — spans/batches is the coalescing factor.
+
+Gauges record last/max/mean of a sampled value (e.g.
+``queue_depth.<worker_id>``, that batcher's input-queue backlog at each
+drain).
 
 float += under the GIL is atomic enough for counters; a lock would cost more
 than the statistic is worth, so snapshots are only approximately consistent.
@@ -14,13 +25,15 @@ from __future__ import annotations
 
 import time
 from collections import defaultdict
-from typing import Dict
+from typing import Dict, List
 
 
 class StageTimers:
     def __init__(self):
         self.total_s: Dict[str, float] = defaultdict(float)
         self.count: Dict[str, int] = defaultdict(int)
+        self.counters: Dict[str, float] = defaultdict(float)
+        self._gauges: Dict[str, List[float]] = {}   # name -> [last,max,sum,n]
 
     def add(self, stage: str, dt: float) -> None:
         self.total_s[stage] += dt
@@ -32,9 +45,32 @@ class StageTimers:
         self.add(stage, now - t0)
         return now
 
+    # ---- counters / gauges ---------------------------------------------------
+    def inc(self, name: str, v: float = 1.0) -> None:
+        self.counters[name] += v
+
+    def gauge(self, name: str, v: float) -> None:
+        g = self._gauges.get(name)
+        if g is None:
+            self._gauges[name] = [v, v, v, 1]
+        else:
+            g[0] = v
+            g[1] = max(g[1], v)
+            g[2] += v
+            g[3] += 1
+
+    def padding_efficiency(self) -> float:
+        """Valid rows / dispatched rows (1.0 = no padding waste)."""
+        dispatched = self.counters.get("rows_dispatched", 0.0)
+        if dispatched <= 0:
+            return 1.0
+        return self.counters.get("rows_valid", 0.0) / dispatched
+
     def reset(self) -> None:
         self.total_s.clear()
         self.count.clear()
+        self.counters.clear()
+        self._gauges.clear()
 
     def snapshot(self) -> Dict[str, Dict[str, float]]:
         return {stage: {"total_s": self.total_s[stage],
@@ -42,3 +78,10 @@ class StageTimers:
                         "mean_ms": (1e3 * self.total_s[stage] /
                                     max(self.count[stage], 1))}
                 for stage in sorted(self.total_s)}
+
+    def counter_snapshot(self) -> Dict[str, float]:
+        return dict(self.counters)
+
+    def gauge_snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {name: {"last": g[0], "max": g[1], "mean": g[2] / max(g[3], 1)}
+                for name, g in sorted(self._gauges.items())}

@@ -2,8 +2,10 @@
 
 Requests are split into fixed-size segments; only small descriptors flow
 through the FIFO queues while the sample bytes live in the request's input
-buffer.  Special ids: ``SHUTDOWN`` asks a worker to exit; workers emit
-``Message(OOM/READY, ...)`` sentinels to the prediction accumulator.
+buffer.  Special ids: ``SHUTDOWN`` asks a worker to exit, ``FLUSH`` asks its
+batcher to close any partially-filled coalesced batch immediately (quiesce);
+workers emit ``Message(OOM/READY, ...)`` sentinels to the prediction
+accumulator.
 
 Hot-path extensions (DESIGN.md §3):
   * every in-flight request owns a :class:`Request` descriptor carrying a
@@ -13,7 +15,14 @@ Hot-path extensions (DESIGN.md §3):
     be in flight at once;
   * a message with ``m is None`` is a *device partial*: the weighted sum of
     ``count`` member predictions, pre-combined on one device
-    (DESIGN.md §4) — the accumulator just adds it into Y.
+    (DESIGN.md §4) — the accumulator just adds it into Y;
+  * under the coalescing scheduler one compiled batch carries rows from
+    *multiple* (request, segment) pairs — a :class:`Span` is one contiguous
+    row-range of one segment inside one batch, and a batch's span list is
+    the *scatter descriptor* the sender walks to route output rows back to
+    their requests.  A segment's rows may therefore arrive split across
+    several messages: ``Message.row_lo`` locates a message's rows inside the
+    segment, and downstream accounting counts **rows, not messages**.
 """
 from __future__ import annotations
 
@@ -23,6 +32,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 SHUTDOWN = -1          # segment-ids-queue sentinel: worker must exit
+FLUSH = -3             # segment-ids-queue sentinel: flush open coalesced batch
 OOM = -1               # prediction-queue sentinel: device out of memory
 READY = -2             # prediction-queue sentinel: worker initialized
 
@@ -46,13 +56,16 @@ class Message:
     """The {s, m, P} triplet (paper §II.C.2), tagged with the request id.
 
     ``m is None`` (with ``s >= 0``) marks a device-partial message whose P
-    already folds ``count`` weighted member predictions.  Sentinels use
-    P=None."""
+    already folds ``count`` weighted member predictions.  Under coalescing a
+    per-member message may carry only a row-range of its segment: ``P`` then
+    covers segment rows ``[row_lo, row_lo + len(P))`` and the accumulator
+    debits rows, not messages.  Sentinels use P=None."""
     s: int                       # segment id (or OOM / READY)
     m: Optional[int]             # model id; None = device partial
-    P: Optional[np.ndarray]      # (end(s)-start(s), C) prediction matrix
+    P: Optional[np.ndarray]      # (rows, C) prediction matrix
     rid: int = 0                 # request id
     count: int = 1               # member contributions folded into P
+    row_lo: int = 0              # first segment row covered by P
 
     @property
     def is_sentinel(self) -> bool:
@@ -81,3 +94,17 @@ class Request:
     def bounds(self, s: int):
         return (start(s, self.segment_size),
                 end(s, self.segment_size, self.n))
+
+
+@dataclass
+class Span:
+    """One contiguous row-range of one segment inside one coalesced batch.
+
+    The batcher emits a batch as ``(buffer, [Span, ...])``; the span list is
+    the scatter descriptor: batch rows ``[batch_off, batch_off + n)`` hold
+    segment rows ``[seg_off, seg_off + n)`` of segment ``s`` of ``req``."""
+    req: Request
+    s: int                       # segment id within req
+    seg_off: int                 # first row within the segment (0-based)
+    batch_off: int               # first row within the batch buffer
+    n: int                       # row count

@@ -16,10 +16,14 @@ Hot-path architecture (DESIGN.md §§3-5):
     data-parallel instances, which makes per-device contribution counts
     deterministic and enables the device-resident partial combine
     (``device_combine=True``): one accumulator message per device per
-    segment instead of one per member per segment;
+    segment instead of one per member per segment — striping is unchanged
+    under coalescing, so row-count flush accounting still closes;
   * requests are tagged with ids and pipelined — up to ``max_in_flight``
     ``predict_async()`` calls overlap instead of serializing on the
-    accumulator.
+    accumulator.  The window defaults to 16 so the coalescing batchers
+    (``coalesce=True``, bounded ``max_wait_us`` linger) see rows from many
+    small concurrent requests and can pack them into full compiled batches;
+    ``quiesce()`` force-flushes any lingering partial batches.
 """
 from __future__ import annotations
 
@@ -35,8 +39,8 @@ from repro.core.allocation import AllocationMatrix
 from repro.serving.accumulator import PredictionAccumulator, RequestHandle
 from repro.serving.combiner import DeviceCombiner
 from repro.serving.metrics import StageTimers
-from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, SHUTDOWN, Message,
-                                    Request)
+from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, FLUSH, SHUTDOWN,
+                                    Message, Request)
 from repro.serving.worker import Worker
 
 
@@ -52,7 +56,9 @@ class InferenceSystem:
                  use_kernel: bool = False,
                  ready_timeout: float = 300.0,
                  device_combine: bool = True,
-                 max_in_flight: int = 4):
+                 max_in_flight: int = 16,
+                 coalesce: bool = True,
+                 max_wait_us: int = 500):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
@@ -61,6 +67,8 @@ class InferenceSystem:
         self.combine = combine
         self.device_combine = device_combine
         self.max_in_flight = max(1, max_in_flight)
+        self.coalesce = coalesce
+        self.max_wait_us = max_wait_us
         self.M = len(self.cfgs)
         classes = {c.vocab_size for c in self.cfgs}
         if len(classes) != 1:
@@ -93,7 +101,8 @@ class InferenceSystem:
                        queue.Queue(), self.prediction_queue, m,
                        max_seq, segment_size, fake=fake,
                        frontend=frontends.get(m), use_kernel=use_kernel,
-                       combiner=self.combiners.get(d), timers=self.timers)
+                       combiner=self.combiners.get(d), timers=self.timers,
+                       coalesce=coalesce, max_wait_us=max_wait_us)
             self.workers.append(w)
             self._instances[m].append(w)
 
@@ -107,10 +116,18 @@ class InferenceSystem:
 
     # ---- per-request input buffers (versioned swap) --------------------------
     def _take_buffer(self, n: int, width: int) -> np.ndarray:
+        """Best-fit reuse: the smallest pooled buffer that holds ``n`` rows.
+        First-fit would let one huge early request pin oversized buffers on
+        every later small request for the rest of the session."""
         with self._pool_lock:
+            best = -1
             for i, b in enumerate(self._buffer_pool):
-                if b.shape[0] >= n and b.shape[1] == width:
-                    return self._buffer_pool.pop(i)
+                if b.shape[0] >= n and b.shape[1] == width and (
+                        best < 0 or
+                        b.shape[0] < self._buffer_pool[best].shape[0]):
+                    best = i
+            if best >= 0:
+                return self._buffer_pool.pop(best)
         return np.zeros((max(n, self.segment_size), width), np.int32)
 
     def _on_request_complete(self, handle: RequestHandle) -> None:
@@ -154,12 +171,16 @@ class InferenceSystem:
                           members, self._request_weights(members), self.combine)
             handle = self.accumulator.begin(req)
             # static striping: (s, m) -> one instance; makes per-device
-            # contribution counts deterministic for the partial combine
+            # contribution counts deterministic for the partial combine.
+            # Rotating by rid spreads single-segment (small) requests across
+            # data-parallel instances instead of pinning them all to s=0's
+            # instance; the combiner's expected map derives from this same
+            # plan, so flush accounting still closes.
             plan = []
             for s in range(req.num_segments()):
                 for m in members:
                     inst = self._instances[m]
-                    plan.append((inst[s % len(inst)], s))
+                    plan.append((inst[(s + rid) % len(inst)], s))
             if self.combiners:
                 expected: Dict[int, list] = {}
                 for w, s in plan:
@@ -205,10 +226,29 @@ class InferenceSystem:
         dt = time.perf_counter() - t0
         return Y, repeats * X.shape[0] / dt
 
+    def quiesce(self) -> None:
+        """Force every worker's batcher to flush its partially-filled
+        coalesced batch immediately instead of lingering ``max_wait_us`` —
+        useful before latency-sensitive waits or a drain."""
+        for w in self.workers:
+            w.input_queue.put(FLUSH)
+
     def stage_timings(self) -> Dict[str, Dict[str, float]]:
         """Per-stage wall-clock counters (batcher wait / fill / predict /
         transfer / combine / accumulate) since construction or reset."""
         return self.timers.snapshot()
+
+    def serving_counters(self) -> Dict[str, float]:
+        """Coalescing counters (rows_valid / rows_dispatched / batches /
+        spans) plus derived padding efficiency."""
+        c = self.timers.counter_snapshot()
+        c["padding_efficiency"] = self.timers.padding_efficiency()
+        return c
+
+    def serving_gauges(self) -> Dict[str, Dict[str, float]]:
+        """Sampled gauges, keyed per worker (``queue_depth.<worker_id>``:
+        that batcher's input-queue backlog at each drain)."""
+        return self.timers.gauge_snapshot()
 
     def shutdown(self):
         if self._shutdown:

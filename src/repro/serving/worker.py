@@ -1,37 +1,59 @@
 """A worker: one model instance pinned to one device at one batch size.
 
 Faithful to paper Fig. 2 — three asynchronous threads per worker:
-  * the *batcher* turns incoming segment ids into padded batches,
+  * the *batcher* coalesces incoming segment rows into padded batches,
   * the *predictor* owns the params on its device and runs the jitted step,
-  * the *prediction sender* reassembles batch outputs into segment
-    predictions and forwards them (device partial or {s, m, P} message).
+  * the *prediction sender* scatters batch outputs back to their segments
+    and forwards them (device partial or {s, m, P} message).
 
 Hardware adaptation (DESIGN.md §2): the paper uses one OS process per worker
 (TF1 sessions hold the GIL); with JAX, XLA executions release the GIL and
 dispatch is asynchronous, so threads + per-worker queues give the same
 overlap without IPC serialization overhead.
 
-Hot-path mechanics (DESIGN.md §3):
-  * the batcher writes each segment into a **preallocated ring** of
-    segment-span slots with one vectorized fill — batches are offset views
-    into the slot, so there is no per-chunk allocation or
-    ``np.concatenate``-padding; slot backpressure (a free-list queue) bounds
-    in-flight memory, and a slot is recycled only after the predictor's
-    output is materialized — on CPU ``device_put`` may alias host memory, so
-    early reuse would corrupt an in-flight batch;
-  * short remainder chunks are padded to the next **power-of-two bucket**
-    (not the full compiled batch) — one jitted callable serves every bucket,
-    with jit's shape cache bounding compilations to ~log2(batch) entries, and
-    input buffers are donated on accelerators so XLA can reuse them;
+Coalescing scheduler (DESIGN.md §3): the paper's batching process forms
+batches strictly within one (request, segment) pair, so heavy traffic of
+many small requests runs nothing but padded remainder buckets.  Here the
+batcher drains its input queue and packs rows from *multiple* in-flight
+requests/segments into full compiled batches:
+
+  * the unit moved through the pipeline is a **ring slot** spanning
+    ``ceil(segment/batch)`` compiled batches, plus a **scatter descriptor**
+    — a list of :class:`~repro.serving.segments.Span` entries mapping slot
+    row-ranges back to (request, segment, segment-row) coordinates.  Spans
+    never cross a compiled-batch boundary, so each span belongs to exactly
+    one predictor chunk;
+  * a full slot flushes immediately; a partial slot lingers at most
+    ``max_wait_us`` for more rows (bounded latency), and ``SHUTDOWN`` /
+    ``FLUSH`` (quiesce) force an immediate flush;
+  * a flushed slot is cut into full compiled batches plus a short remainder
+    padded to the next **power-of-two bucket** (not the full compiled batch)
+    — one jitted callable serves every bucket, with jit's shape cache
+    bounding compilations to ~log2(batch) entries, and input buffers are
+    donated on accelerators so XLA can reuse them;
+  * ``coalesce=False`` restores the PR-1 one-item-at-a-time batching (each
+    (request, segment) flushes its own slot) as a measurement baseline;
+  * slots come from a **preallocated ring** (free-list backpressure bounds
+    in-flight memory); a slot is recycled only after the predictor's output
+    is materialized — on CPU ``device_put`` may alias host memory, so early
+    reuse would corrupt an in-flight batch.  Mismatched-seq requests
+    (request width != compiled ring width) draw buffers from a small
+    per-width side pool instead of allocating per slot;
+  * the sender reassembles each segment from its spans (all of a segment's
+    spans pass through one sender in order) and forwards ONE contribution
+    per (request, segment) — per-span forwarding would multiply
+    combiner/accumulator traffic by chunks-per-segment;
   * per-stage wall-clock counters (metrics.StageTimers) instrument the
-    batcher wait, batch fill, predict dispatch, and device sync/transfer.
+    batcher wait, batch fill, predict dispatch, and device sync/transfer;
+    padding counters (``rows_valid`` / ``rows_dispatched``) and the
+    ``queue_depth`` gauge expose coalescing efficiency.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +64,11 @@ from repro.core.devices import DeviceSpec
 from repro.kernels.ops import pow2_clamp
 from repro.serving import segments as seg
 from repro.serving.metrics import StageTimers
-from repro.serving.segments import Message, Request, SHUTDOWN
+from repro.serving.segments import FLUSH, Message, Request, SHUTDOWN, Span
 
 MIN_BUCKET = 8
+RING_SLOTS = 4          # in-flight slot bound per worker
+ALT_POOL_CAP = 4        # pooled mismatched-seq buffers per width
 
 
 def bucket_for(n: int, batch_size: int) -> int:
@@ -70,6 +94,19 @@ def make_predict_fn(cfg: ModelConfig, use_kernel: bool = False,
     return jax.jit(predict, donate_argnums=(1,) if donate else ())
 
 
+class _OpenBatch:
+    """The batcher's in-progress coalesced batch."""
+    __slots__ = ("slot", "buf", "width", "fill", "spans", "deadline")
+
+    def __init__(self, slot, buf, width: int, deadline: float):
+        self.slot = slot             # ring index, or None (side-pool buffer)
+        self.buf = buf
+        self.width = width
+        self.fill = 0
+        self.spans: List[Span] = []
+        self.deadline = deadline     # linger expiry (perf_counter seconds)
+
+
 class Worker:
     def __init__(self, worker_id: str, cfg: ModelConfig, params,
                  device: DeviceSpec, batch_size: int,
@@ -78,7 +115,8 @@ class Worker:
                  model_idx: int, max_seq: int, segment_size: int,
                  *, fake: bool = False, frontend: Optional[np.ndarray] = None,
                  use_kernel: bool = False, combiner=None,
-                 timers: Optional[StageTimers] = None):
+                 timers: Optional[StageTimers] = None,
+                 coalesce: bool = True, max_wait_us: int = 500):
         self.worker_id = worker_id
         self.cfg = cfg
         self.batch_size = batch_size
@@ -90,22 +128,30 @@ class Worker:
         self.device = device
         self.combiner = combiner
         self.timers = timers or StageTimers()
+        self.coalesce = coalesce
+        self.linger_s = max(0, max_wait_us) * 1e-6
+        self._depth_gauge = f"queue_depth.{worker_id}"
         self.num_classes = cfg.vocab_size
         self._batch_q: "queue.Queue" = queue.Queue(maxsize=4)
         self._send_q: "queue.Queue" = queue.Queue(maxsize=8)
         self._threads: List[threading.Thread] = []
         self._jax_device = device.jax_devices[0] if device.jax_devices else None
 
-        # preallocated input ring: one segment-span slot per entry (chunks are
-        # offset views into the slot), 4 deep so later segments batch while
-        # earlier ones predict
+        # preallocated input ring: each slot spans ceil(segment/batch)
+        # compiled batches, so one queue hand-off moves a whole segment's
+        # worth of coalesced rows through the pipeline (per-batch hand-offs
+        # would multiply queue traffic by chunks-per-segment).  The free-list
+        # bounds in-flight slots (backpressure).  Mismatched-seq requests
+        # draw from a pooled per-width side list instead.
         chunks_per_seg = max(1, -(-segment_size // batch_size))
         self._span = chunks_per_seg * batch_size
         self._ring = [np.zeros((self._span, max_seq), np.int32)
-                      for _ in range(4)]
+                      for _ in range(RING_SLOTS)]
         self._free_slots: "queue.Queue[int]" = queue.Queue()
         for i in range(len(self._ring)):
             self._free_slots.put(i)
+        self._alt_pool: Dict[int, List[np.ndarray]] = {}
+        self._alt_lock = threading.Lock()
 
         try:
             if self._jax_device is not None:
@@ -151,34 +197,109 @@ class Worker:
         for t in self._threads:
             t.join(timeout)
 
+    # ---- batch slots ---------------------------------------------------------
+    def _open_batch(self, width: int) -> _OpenBatch:
+        if width == self._ring[0].shape[1]:
+            slot = self._free_slots.get()
+            buf = self._ring[slot]
+        else:                  # rare: request seq != compiled ring seq
+            slot = None
+            with self._alt_lock:
+                pool = self._alt_pool.setdefault(width, [])
+                buf = pool.pop() if pool else None
+            if buf is None:
+                buf = np.zeros((self._span, width), np.int32)
+        return _OpenBatch(slot, buf, width,
+                          time.perf_counter() + self.linger_s)
+
+    def _recycle(self, slot: Optional[int], buf: np.ndarray) -> None:
+        if slot is not None:
+            self._free_slots.put(slot)
+            return
+        with self._alt_lock:
+            pool = self._alt_pool.setdefault(buf.shape[1], [])
+            if len(pool) < ALT_POOL_CAP:
+                pool.append(buf)
+
     # ---- stage 1: batcher ----------------------------------------------------
+    def _flush(self, batch: _OpenBatch) -> None:
+        """Close a slot: cut it into compiled-batch chunks (full batches plus
+        a pow2-bucketed remainder), zero stale pad rows, and hand the whole
+        slot to the predictor in ONE queue hop.  Padding counters make
+        coalescing efficiency observable."""
+        chunks = []                           # (offset, bucket, valid) views
+        for off in range(0, batch.fill, self.batch_size):
+            valid = min(self.batch_size, batch.fill - off)
+            bucket = bucket_for(valid, self.batch_size)
+            if valid < bucket:
+                batch.buf[off + valid:off + bucket] = 0   # stale tail rows
+            chunks.append((off, bucket, valid))
+            self.timers.inc("rows_valid", valid)
+            self.timers.inc("rows_dispatched", bucket)
+        self.timers.inc("batches", len(chunks))
+        self.timers.inc("spans", len(batch.spans))
+        self._batch_q.put((batch.slot, batch.buf, chunks, batch.spans))
+
     def _batcher(self):
+        open_batch: Optional[_OpenBatch] = None
         while True:
             t0 = time.perf_counter()
-            item = self.input_queue.get()
+            if open_batch is None:
+                item = self.input_queue.get()
+            else:
+                # linger: wait for more rows, bounded by the slot deadline
+                wait = open_batch.deadline - time.perf_counter()
+                try:
+                    if wait > 0:
+                        item = self.input_queue.get(timeout=wait)
+                    else:
+                        item = self.input_queue.get_nowait()
+                except queue.Empty:
+                    t0 = self.timers.timed("batcher_wait", t0)
+                    self._flush(open_batch)   # linger expired
+                    open_batch = None
+                    self.timers.timed("batch_fill", t0)
+                    continue
             t0 = self.timers.timed("batcher_wait", t0)
+            self.timers.gauge(self._depth_gauge, self.input_queue.qsize())
             if item == SHUTDOWN:
+                if open_batch is not None:
+                    self._flush(open_batch)
                 self._batch_q.put(None)
                 return
+            if item == FLUSH:                 # quiesce: close the open slot
+                if open_batch is not None:
+                    self._flush(open_batch)
+                    open_batch = None
+                continue
             req, s = item                     # type: Request, int
             lo, hi = req.bounds(s)
-            data = req.x[lo:hi]               # zero-copy view of the request
-            n = hi - lo
-            if data.shape[1] == self._ring[0].shape[1]:
-                slot = self._free_slots.get()
-                buf = self._ring[slot]
-            else:                  # rare: request seq != compiled ring seq
-                slot, buf = None, np.zeros((self._span, data.shape[1]),
-                                           np.int32)
-            buf[:n] = data                    # one vectorized fill per segment
-            chunks = []                       # (offset, bucket, valid) views
-            for i in range(0, n, self.batch_size):
-                valid = min(self.batch_size, n - i)
-                bucket = bucket_for(valid, self.batch_size)
-                if valid < bucket:
-                    buf[i + valid:i + bucket] = 0     # stale tail rows
-                chunks.append((i, bucket, valid))
-            self._batch_q.put((req, s, slot, buf, chunks))
+            width = req.x.shape[1]
+            pos = lo
+            while pos < hi:
+                if open_batch is not None and open_batch.width != width:
+                    self._flush(open_batch)   # can't mix seq widths
+                    open_batch = None
+                if open_batch is None:
+                    open_batch = self._open_batch(width)
+                f = open_batch.fill
+                fill = min(self._span - f, hi - pos)
+                open_batch.buf[f:f + fill] = req.x[pos:pos + fill]  # one copy
+                # spans never cross a compiled-batch boundary inside the
+                # slot, so every span maps to exactly one predictor chunk
+                while fill > 0:
+                    k = min(self.batch_size - f % self.batch_size, fill)
+                    open_batch.spans.append(Span(req, s, pos - lo, f, k))
+                    f += k
+                    pos += k
+                    fill -= k
+                open_batch.fill = f
+                if f == self._span:
+                    self._flush(open_batch)   # full slot: flush immediately
+                    open_batch = None
+            if not self.coalesce and open_batch is not None:
+                self._flush(open_batch)       # PR-1 semantics: per-item flush
+                open_batch = None
             self.timers.timed("batch_fill", t0)
 
     # ---- stage 2: predictor --------------------------------------------------
@@ -188,7 +309,7 @@ class Worker:
             if item is None:
                 self._send_q.put(None)
                 return
-            req, s, slot, buf, chunks = item
+            slot, buf, chunks, spans = item
             t0 = time.perf_counter()
             outs = None
             if not self.fake:
@@ -202,42 +323,64 @@ class Worker:
                     fe = (self.frontend[:bucket]
                           if self.frontend is not None else None)
                     y = self.predict_fn(self.params, x, fe)
-                    outs.append((valid, y))    # async dispatch: no block here
-            self._send_q.put((req, s, slot, outs))
+                    outs.append(y)             # async dispatch: no block here
+            self._send_q.put((slot, buf, spans, outs))
             self.timers.timed("predict", t0)
 
     # ---- stage 3: sender -----------------------------------------------------
     def _sender(self):
+        """Walk each batch's scatter descriptor and route rows back to their
+        segments.  A segment's spans all pass through THIS sender in
+        seg_off order (the broadcaster assigns every (segment, model) pair to
+        one instance and batches flow FIFO), so the sender reassembles them
+        in a local staging dict and forwards ONE segment-level contribution —
+        per-span forwarding would multiply combiner/accumulator traffic by
+        batches-per-segment and serialize senders on the combiner lock."""
         on_device = self.combiner is not None
+        staging: Dict[tuple, list] = {}        # (rid, s) -> [rows, parts]
         while True:
             item = self._send_q.get()
             if item is None:
                 return
-            req, s, slot, outs = item
+            slot, buf, spans, outs = item
             t0 = time.perf_counter()
-            lo, hi = req.bounds(s)
-            if outs is None:                   # fake predictor: instant zeros
-                P = np.zeros((hi - lo, self.num_classes), np.float32)
-            else:
-                parts = []
-                for valid, y in outs:
-                    if on_device:
+            if outs is not None:
+                if on_device:
+                    for y in outs:
                         y.block_until_ready()  # compute done; stays on device
-                        parts.append(y[:valid])
-                    else:
-                        parts.append(np.asarray(y)[:valid])  # d->h sync
-                if len(parts) == 1:
-                    P = parts[0]
-                elif on_device:
-                    P = jnp.concatenate(parts, axis=0)
                 else:
-                    P = np.concatenate(parts, axis=0)
-                assert P.shape[0] == hi - lo
-            if slot is not None:               # ring slot safe to recycle now
-                self._free_slots.put(slot)
+                    outs = [np.asarray(y) for y in outs]   # d->h sync
+            self._recycle(slot, buf)           # ring slot safe to reuse now
             self.timers.timed("transfer", t0)
-            if on_device:
-                self.combiner.add(req, s, self.model_idx, P)
-            else:
-                self.prediction_queue.put(Message(s, self.model_idx,
-                                                  np.asarray(P), rid=req.rid))
+            for sp in spans:
+                lo, hi = sp.req.bounds(sp.s)
+                key = (sp.req.rid, sp.s)
+                st = staging.get(key)
+                if st is None:
+                    st = staging[key] = [0, []]
+                # FIFO pipeline order is what makes append-reassembly valid;
+                # seg_off pins that assumption instead of trusting it
+                assert sp.seg_off == st[0], (key, sp.seg_off, st[0])
+                if outs is not None:
+                    # chunk-aligned spans: batch_off names the chunk directly
+                    y = outs[sp.batch_off // self.batch_size]
+                    off = sp.batch_off % self.batch_size
+                    st[1].append(y[off:off + sp.n])
+                st[0] += sp.n
+                if st[0] < hi - lo:
+                    continue                   # segment still in flight
+                del staging[key]
+                if outs is None:               # fake predictor: instant zeros
+                    P = np.zeros((hi - lo, self.num_classes), np.float32)
+                elif len(st[1]) == 1:
+                    P = st[1][0]
+                elif on_device:
+                    P = jnp.concatenate(st[1], axis=0)
+                else:
+                    P = np.concatenate(st[1], axis=0)
+                if on_device:
+                    self.combiner.add(sp.req, sp.s, self.model_idx, P)
+                else:
+                    self.prediction_queue.put(Message(
+                        sp.s, self.model_idx, np.asarray(P),
+                        rid=sp.req.rid))

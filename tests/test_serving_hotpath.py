@@ -132,7 +132,8 @@ def test_partial_combine_message_reduction(ens2):
                      device_combine=False) as s:
         before = s.accumulator.data_messages
         Y2 = s.predict(X)
-        assert s.accumulator.data_messages - before == 8      # M=2 x 4 segs
+        # senders reassemble spans before forwarding: still M=2 x 4 segs
+        assert s.accumulator.data_messages - before == 8
     np.testing.assert_allclose(Y1, Y2, atol=2e-5)
 
 
