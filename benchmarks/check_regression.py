@@ -22,11 +22,17 @@ import sys
 # within 5% of the PR-1 engine on single large requests — as an absolute
 # floor of 0.90 (5% criterion + 5% allowance for shared-runner noise)
 # rather than a tolerance on the committed ~1.0 baseline.
+# mixed_priority gates the ISSUE-3 acceptance: high-priority p99 >= 3x
+# better than strict FIFO (absolute floor; the wide relative tolerance
+# absorbs cross-runner tail-latency noise on the committed baseline) with
+# total throughput within 10% of FIFO (0.90 absolute floor).
 GATED_METRICS = [
     ("speedup", None, None),                  # pipelined engine vs seed
     ("large_request_ratio", None, 0.90),      # coalesced vs PR-1, big request
     ("many_small.speedup", None, None),       # coalesced vs PR-1, small reqs
     ("many_small.coalesced.padding_efficiency", 0.15, None),
+    ("mixed_priority.hp_p99_improvement", 0.70, 3.0),
+    ("mixed_priority.throughput_ratio", None, 0.90),
 ]
 
 

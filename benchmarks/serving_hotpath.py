@@ -15,11 +15,21 @@ transfers, combination.  Scenarios:
                     far smaller than a segment, run with REAL (tiny) models
                     so padding waste costs real compute.  Compares the PR-1
                     engine against the coalescing scheduler and reports
-                    padding efficiency (valid rows / dispatched rows).
+                    padding efficiency (valid rows / dispatched rows);
+  * ``mixed_priority``  the SLO workload (ISSUE 3, ROADMAP item a): a bulk
+                    scan saturates the admission queues while small
+                    latency-sensitive requests trickle in.  Runs the same
+                    trace twice — all-normal (strict FIFO, the PR-2
+                    behavior) vs the small requests at ``priority="high"``
+                    — and reports per-class p50/p99 latency plus total
+                    segments/sec.
 
 Acceptance (ISSUE 2): many_small coalesced >= 1.5x the PR-1 engine
 segments/sec; single large-request throughput within 5% (the
 ``large_request_ratio``); padding efficiency reported in BENCH_serving.json.
+Acceptance (ISSUE 3): high-priority p99 improves >= 3x over FIFO while total
+segments/sec stays within 10% (``mixed_priority.hp_p99_improvement`` /
+``.throughput_ratio`` in BENCH_serving.json, gated by check_regression.py).
 """
 from __future__ import annotations
 
@@ -31,8 +41,13 @@ from benchmarks.seed_baseline import SeedSystem
 from repro.configs import ensemble
 from repro.core import AllocationMatrix, host_cpus
 from repro.serving import segments as seg
+from repro.serving.segments import PredictOptions
 
 GiB = 1024 ** 3
+
+
+def _pctl(values, q: float) -> float:
+    return float(np.percentile(np.asarray(values, np.float64), q))
 
 
 def _measure(system, X, requests: int, pipelined: bool) -> dict:
@@ -102,8 +117,49 @@ def _measure_many_small(system, Xs, rounds: int) -> dict:
     }
 
 
+def _measure_mixed_priority(system, bulk_X, small_Xs, rounds: int,
+                            high_priority: bool) -> dict:
+    """One round = a bulk scan submitted asynchronously (normal priority)
+    with small requests predicted synchronously while it drains.  The
+    broadcaster enqueues every bulk segment up front, so under strict FIFO
+    the first small request waits for the whole scan; with priority
+    admission it jumps the per-worker queues."""
+    opts = PredictOptions(priority="high" if high_priority else "normal")
+    system.predict(bulk_X[:system.segment_size])     # warm shapes
+    for x in small_Xs[:2]:
+        system.predict(x, options=opts)
+    seg_sz = system.segment_size
+    n_segments = rounds * (seg.num_segments(bulk_X.shape[0], seg_sz) +
+                           sum(seg.num_segments(x.shape[0], seg_sz)
+                               for x in small_Xs))
+    lat_high, lat_bulk = [], []
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        tb = time.perf_counter()
+        h_bulk = system.predict_async(bulk_X)
+        for x in small_Xs:
+            t1 = time.perf_counter()
+            system.predict(x, options=opts, timeout=600.0)
+            lat_high.append(time.perf_counter() - t1)
+        h_bulk.result(600.0)
+        lat_bulk.append(time.perf_counter() - tb)
+    dt = time.perf_counter() - t0
+    return {
+        "rounds": rounds,
+        "seconds": dt,
+        "segments_per_sec": n_segments / dt,
+        "high": {"requests": len(lat_high),
+                 "p50_ms": 1e3 * _pctl(lat_high, 50),
+                 "p99_ms": 1e3 * _pctl(lat_high, 99)},
+        "bulk": {"requests": len(lat_bulk),
+                 "p50_ms": 1e3 * _pctl(lat_bulk, 50),
+                 "p99_ms": 1e3 * _pctl(lat_bulk, 99)},
+    }
+
+
 def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
-        small_concurrency=48, small_rounds=8, small_max_wait_us=2000):
+        small_concurrency=48, small_rounds=8, small_max_wait_us=2000,
+        mixed_rounds=3, mixed_smalls=8, mixed_bulk=1024):
     import jax
     import repro.models as M
     from repro.serving.system import InferenceSystem
@@ -154,6 +210,29 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
                        many["pipelined"]["segments_per_sec"])
     results["many_small"] = many
 
+    # ---- mixed-priority: SLO traffic behind a bulk scan (real tiny models) --
+    srng = np.random.default_rng(2)
+    bulk_X = srng.integers(0, 512, (mixed_bulk, seq)).astype(np.int32)
+    small_Xs = [srng.integers(0, 512, (2 + i % 3, seq)).astype(np.int32)
+                for i in range(mixed_smalls)]
+    # segment_size 16 keeps ring slots small: priority admission reorders the
+    # *queue*, so the non-preemptible head (slots already in the predictor
+    # pipeline) must stay short for a high-priority request to benefit
+    mixed = {}
+    for mode, high in (("fifo", False), ("priority", True)):
+        with InferenceSystem(small_cfgs, small_params, alloc_small,
+                             segment_size=16, max_seq=seq,
+                             device_combine=True, coalesce=True,
+                             max_in_flight=32,
+                             max_wait_us=small_max_wait_us) as system:
+            mixed[mode] = _measure_mixed_priority(
+                system, bulk_X, small_Xs, mixed_rounds, high_priority=high)
+    mixed["hp_p99_improvement"] = (mixed["fifo"]["high"]["p99_ms"] /
+                                   mixed["priority"]["high"]["p99_ms"])
+    mixed["throughput_ratio"] = (mixed["priority"]["segments_per_sec"] /
+                                 mixed["fifo"]["segments_per_sec"])
+    results["mixed_priority"] = mixed
+
     if csv:
         print("serving_hotpath:variant,segments_per_sec,messages_per_request")
         for name in ("seed", "pipelined", "coalesced"):
@@ -170,6 +249,18 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
             print(f"serving_hotpath:many_small.{name}.padding_efficiency,"
                   f"{r['padding_efficiency']:.3f},")
         print(f"serving_hotpath:many_small.speedup,{many['speedup']:.2f},")
+        for mode in ("fifo", "priority"):
+            r = mixed[mode]
+            print(f"serving_hotpath:mixed_priority.{mode}.high_p50/p99_ms,"
+                  f"{r['high']['p50_ms']:.1f},{r['high']['p99_ms']:.1f}")
+            print(f"serving_hotpath:mixed_priority.{mode}.bulk_p50/p99_ms,"
+                  f"{r['bulk']['p50_ms']:.1f},{r['bulk']['p99_ms']:.1f}")
+            print(f"serving_hotpath:mixed_priority.{mode}.segments_per_sec,"
+                  f"{r['segments_per_sec']:.1f},")
+        print(f"serving_hotpath:mixed_priority.hp_p99_improvement,"
+              f"{mixed['hp_p99_improvement']:.2f},")
+        print(f"serving_hotpath:mixed_priority.throughput_ratio,"
+              f"{mixed['throughput_ratio']:.3f},")
         for name in ("pipelined", "coalesced"):
             for stage, t in results[name]["stage_timings"].items():
                 print(f"serving_hotpath:{name}.{stage},"

@@ -1,8 +1,11 @@
-"""Quickstart: the paper's whole pipeline in ~60 lines.
+"""Quickstart: the paper's whole pipeline in ~80 lines.
 
 1. Build a heterogeneous ensemble of (reduced) assigned-pool LMs.
 2. Optimize the allocation matrix (Algorithm 1 -> Algorithm 2).
-3. Deploy the asynchronous inference system and serve predictions.
+3. Deploy the asynchronous inference system behind the EnsembleClient
+   facade and serve predictions — sync, with per-request options
+   (priority / deadline / member subset), streaming per-segment partials,
+   and a prediction cache.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,7 +20,8 @@ import numpy as np
 import repro.models as M
 from repro.configs import ensemble
 from repro.core import AllocationOptimizer, MeasuredBench, host_cpus
-from repro.serving.system import InferenceSystem
+from repro.serving import (EnsembleClient, PredictionCache, PredictOptions,
+                           InferenceSystem)
 
 SEQ = 16
 
@@ -44,14 +48,34 @@ def main():
     print("\nallocation matrix (paper Table II style):")
     print(result.matrix.pretty())
 
-    # 3. deploy and serve
+    # 3. deploy and serve through the one request facade
     X = np.random.default_rng(1).integers(
         0, cfgs[0].vocab_size, (40, SEQ)).astype(np.int32)
     with InferenceSystem(cfgs, params, result.matrix, segment_size=32,
                          max_seq=SEQ) as system:
-        Y = system.predict(X)
-    print(f"\nserved {X.shape[0]} requests -> ensemble predictions {Y.shape}")
-    print("top-1 classes of first 8 requests:", Y[:8].argmax(1).tolist())
+        client = EnsembleClient(system, cache=PredictionCache(capacity=1024))
+
+        # sync, full ensemble
+        Y = client.predict(X)
+        print(f"\nserved {X.shape[0]} samples -> ensemble predictions {Y.shape}")
+        print("top-1 classes of first 8 samples:", Y[:8].argmax(1).tolist())
+
+        # per-request options: a latency-sensitive call on a member subset
+        # with a deadline — jumps the admission queue, fails fast if late
+        y_fast = client.predict(X[:4], PredictOptions(
+            priority="high", deadline_ms=10_000, members=[0]))
+        print("member-0-only (high priority):", y_fast.argmax(1).tolist())
+
+        # streaming partials: segments arrive as their ensemble rows close
+        done = []
+        client.predict_stream(
+            X, lambda s, lo, hi, Y_seg: done.append((s, hi - lo))
+        ).result(60.0)
+        print("streamed segments (id, rows):", sorted(done))
+
+        # redundant requests are answered from the cache
+        client.predict(X)
+        print("cache after repeat:", client.metrics()["cache"])
 
 
 if __name__ == "__main__":

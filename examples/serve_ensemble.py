@@ -60,16 +60,23 @@ def main():
     lat, lock = [], threading.Lock()
 
     def client(i):
+        """Every 4th request is latency-sensitive: it rides /v2/predict with
+        priority=high + a deadline; the rest use the v1 /predict shim."""
         x = np.random.default_rng(i).integers(
             0, cfgs[0].vocab_size, (4, SEQ)).tolist()
+        high = i % 4 == 0
+        path, payload = ("/v2/predict",
+                         {"tokens": x, "priority": "high",
+                          "deadline_ms": 120_000}) if high \
+            else ("/predict", {"tokens": x})
         t0 = time.perf_counter()
         req = urllib.request.Request(
-            f"http://127.0.0.1:{args.port}/predict",
-            data=json.dumps({"tokens": x}).encode(),
+            f"http://127.0.0.1:{args.port}{path}",
+            data=json.dumps(payload).encode(),
             headers={"Content-Type": "application/json"})
         y = json.load(urllib.request.urlopen(req))["predictions"]
         with lock:
-            lat.append(time.perf_counter() - t0)
+            lat.append((high, time.perf_counter() - t0))
         assert len(y) == 4
 
     t0 = time.perf_counter()
@@ -83,8 +90,15 @@ def main():
     n = args.requests * 4
     print(f"\n{args.requests} concurrent requests x4 samples: "
           f"{n / wall:.1f} samples/s")
-    print(f"latency p50={np.percentile(lat, 50)*1000:.0f}ms "
-          f"p95={np.percentile(lat, 95)*1000:.0f}ms")
+    for label, flag in (("high(v2)", True), ("normal(v1)", False)):
+        ls = [l for h, l in lat if h is flag]
+        if ls:
+            print(f"latency[{label}] p50={np.percentile(ls, 50)*1000:.0f}ms "
+                  f"p95={np.percentile(ls, 95)*1000:.0f}ms")
+    metrics = json.load(urllib.request.urlopen(
+        f"http://127.0.0.1:{args.port}/metrics"))
+    print(f"padding efficiency: "
+          f"{metrics['counters'].get('padding_efficiency', 1.0):.3f}")
     httpd.shutdown()
     batcher.stop()
     system.shutdown()

@@ -1,6 +1,6 @@
 """``bench(A, calib_data) -> throughput`` — the greedy's scoring function.
 
-Two backends (DESIGN.md §2/§7.1):
+Two backends (DESIGN.md §2/§8.1):
 
 * ``MeasuredBench`` — the paper's: instantiate the inference system in
   Benchmark Mode on calibration samples and time it.  Used on this container
@@ -105,7 +105,7 @@ class MeasuredBench:
 
 
 class MemoBench:
-    """Memoizing wrapper (beyond-paper §7.5): identical matrices are scored
+    """Memoizing wrapper (beyond-paper §8.5): identical matrices are scored
     once.  The paper re-runs the 40 s benchmark on revisits."""
 
     def __init__(self, inner: Bench):

@@ -25,6 +25,13 @@ def main(argv=None):
     ap.add_argument("--bench", default="measured", choices=("measured", "analytic"))
     ap.add_argument("--duration", type=float, default=0.0,
                     help="serve for N seconds then exit (0 = forever)")
+    ap.add_argument("--linger", default="fixed", choices=("fixed", "adaptive"),
+                    help="adaptive scales the coalescing linger down with "
+                         "queue depth (DESIGN.md §7)")
+    ap.add_argument("--max-wait-us", type=int, default=500,
+                    help="coalescing linger bound per open batch slot")
+    ap.add_argument("--cache-capacity", type=int, default=0,
+                    help="rows in the prediction cache (0 disables)")
     args = ap.parse_args(argv)
 
     import jax
@@ -33,6 +40,7 @@ def main(argv=None):
     from repro.configs import ensemble
     from repro.core import (AllocationOptimizer, AnalyticBench, MeasuredBench,
                             host_cpus, tpu_cells)
+    from repro.serving.request_cache import PredictionCache
     from repro.serving.server import serve
     from repro.serving.system import InferenceSystem
 
@@ -71,10 +79,14 @@ def main(argv=None):
 
     system = InferenceSystem(cfgs, params, res.matrix,
                              segment_size=args.segment_size,
-                             max_seq=args.seq, combine=args.combine)
-    httpd, batcher = serve(system, port=args.port)
+                             max_seq=args.seq, combine=args.combine,
+                             max_wait_us=args.max_wait_us,
+                             linger=args.linger)
+    cache = PredictionCache(args.cache_capacity) if args.cache_capacity else None
+    httpd, batcher = serve(system, port=args.port, cache=cache)
     print(f"serving {len(cfgs)} models / {len(system.workers)} workers on "
-          f"http://127.0.0.1:{args.port}  (POST /predict)")
+          f"http://127.0.0.1:{args.port}  (POST /v2/predict with priority/"
+          f"deadline_ms/members, GET /metrics; POST /predict = v1 shim)")
     try:
         if args.duration:
             time.sleep(args.duration)

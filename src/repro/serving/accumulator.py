@@ -10,7 +10,7 @@ per-request ensemble prediction.  Two message kinds (DESIGN.md §§3-4):
     paper's {s, m, P} triplet, folded under the request's combine rule —
     "mean"/"weighted" (``Y += w_m P``), "vote" (majority voting on argmax),
     or "pallas" (buffer the segment's M member predictions, then fuse the
-    weighted combine in the ensemble_combine Pallas kernel, DESIGN.md §7.4).
+    weighted combine in the ensemble_combine Pallas kernel, DESIGN.md §8.4).
 
 Under the coalescing scheduler one member's segment may arrive split across
 several messages (each tagged with ``row_lo``), so completion accounting
@@ -23,6 +23,21 @@ Every message carries a request id, so any number of requests can be in
 flight; each ``begin()`` returns a :class:`RequestHandle` the caller waits
 on, and a completion callback lets the system recycle the request's input
 buffer and open the in-flight window for the next request.
+
+Request-API duties (DESIGN.md §7):
+  * **deadlines** are enforced here as well as at admission — a message for
+    an expired request fails the handle with :class:`DeadlineExceeded`
+    instead of folding further rows, and a batcher that dropped a queued
+    descriptor posts ``Message(DROPPED, ...)`` so the failure surfaces even
+    when no rows ever arrive;
+  * **cancellation**: ``RequestHandle.cancel()`` resolves the future with
+    :class:`RequestCancelled` immediately and marks the request so batchers
+    skip still-queued descriptors; completion is idempotent (a straggler
+    message folding concurrently with ``cancel()`` cannot double-release
+    the in-flight window);
+  * **streaming partials**: with ``on_segment`` set, per-segment row
+    accounting fires ``on_segment(s, lo, hi, Y[lo:hi])`` the moment a
+    segment's ensemble rows close — however the spans were packed.
 """
 from __future__ import annotations
 
@@ -35,13 +50,15 @@ import numpy as np
 
 from repro.serving import segments as seg
 from repro.serving.metrics import StageTimers
-from repro.serving.segments import Message, Request
+from repro.serving.segments import (DeadlineExceeded, Message, Request,
+                                    RequestCancelled)
 
 
 class RequestHandle:
     """Per-request accumulation state + the client-side future."""
 
-    def __init__(self, req: Request):
+    def __init__(self, req: Request,
+                 on_segment: Optional[Callable] = None):
         self.req = req
         self.Y = np.zeros((req.n, req.num_classes), np.float32)
         # member-rows still owed: every member predicts every row exactly once
@@ -49,8 +66,17 @@ class RequestHandle:
         self.done = threading.Event()
         self.error: Optional[BaseException] = None
         self.messages = 0                     # data messages folded
+        self.on_segment = on_segment          # streaming-partials callback
         self._seg_buffers: Dict[int, Dict[int, np.ndarray]] = {}
         self._seg_rows: Dict[int, int] = {}   # pallas path: rows buffered
+        self._finished = False                # guarded by accumulator lock
+        self._canceller: Optional["PredictionAccumulator"] = None
+        if on_segment is not None:            # member-rows owed per segment
+            self._seg_remaining = {
+                s: (req.bounds(s)[1] - req.bounds(s)[0]) * len(req.members)
+                for s in range(req.num_segments())}
+        else:
+            self._seg_remaining = None
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         if not self.done.wait(timeout):
@@ -58,6 +84,19 @@ class RequestHandle:
         if self.error is not None:
             raise self.error
         return self.Y
+
+    def cancel(self) -> bool:
+        """Resolve the future with :class:`RequestCancelled` and mark the
+        request so pipeline stages drop its remaining work.  Returns False
+        when the request already completed (or was never registered).  Rows
+        already packed into ring slots still flow through the pipeline —
+        their messages are dropped as stale — but the in-flight window slot
+        and combiner state are released immediately."""
+        self.req.cancel_event.set()
+        if self._canceller is None:
+            return False
+        return self._canceller.fail(
+            self.req.rid, RequestCancelled(f"request {self.req.rid} cancelled"))
 
 
 class PredictionAccumulator:
@@ -87,8 +126,10 @@ class PredictionAccumulator:
         self.data_messages = 0                # partials + per-member messages
 
     # ---- request lifecycle ----------------------------------------------------
-    def begin(self, req: Request) -> RequestHandle:
-        handle = RequestHandle(req)
+    def begin(self, req: Request,
+              on_segment: Optional[Callable] = None) -> RequestHandle:
+        handle = RequestHandle(req, on_segment=on_segment)
+        handle._canceller = self
         with self._lock:
             self._requests[req.rid] = handle
             self._last = handle
@@ -104,12 +145,33 @@ class PredictionAccumulator:
             raise RuntimeError("no request in flight")
         return handle.result(timeout)
 
-    def _finish(self, handle: RequestHandle):
+    def _finish(self, handle: RequestHandle,
+                error: Optional[BaseException] = None) -> bool:
+        # idempotent: completion can race cancel()/fail() from other threads,
+        # and on_complete releases a BoundedSemaphore slot — exactly once.
+        # The error is assigned under the same lock that claims the finish,
+        # so a racing normal completion can't interleave with it.
         with self._lock:
+            if handle._finished:
+                return False
+            handle._finished = True
+            if error is not None:
+                handle.error = error
             self._requests.pop(handle.req.rid, None)
         handle.done.set()
         if self.on_complete is not None:
             self.on_complete(handle)
+        return True
+
+    def fail(self, rid: int, error: BaseException) -> bool:
+        """Resolve request ``rid`` with ``error`` (deadline expiry /
+        cancellation).  Safe from any thread; returns False when the request
+        already completed."""
+        with self._lock:
+            handle = self._requests.get(rid)
+        if handle is None:
+            return False
+        return self._finish(handle, error)
 
     # ---- the accumulation loop -------------------------------------------------
     def start(self):
@@ -137,11 +199,27 @@ class PredictionAccumulator:
                 with self._lock:
                     pending = list(self._requests.values())
                 for h in pending:
-                    h.error = MemoryError(
-                        "a worker reported OOM ({-1, None, None})")
-                    self._finish(h)
+                    self._finish(h, MemoryError(
+                        "a worker reported OOM ({-1, None, None})"))
+                continue
+            if msg.s == seg.DROPPED and msg.P is None:
+                # a batcher refused to pack rows for an expired/cancelled
+                # request; resolve the future (idempotent across workers)
+                self._drop(msg.rid)
                 continue
             self._accumulate(msg)
+
+    def _drop(self, rid: int) -> None:
+        with self._lock:
+            handle = self._requests.get(rid)
+        if handle is None:
+            return
+        if handle.req.cancel_event.is_set():
+            self._finish(handle, RequestCancelled(
+                f"request {rid} cancelled"))
+        else:
+            self._finish(handle, DeadlineExceeded(
+                f"request {rid} missed its deadline in the admission queue"))
 
     _expected_ready_count = None
 
@@ -160,6 +238,10 @@ class PredictionAccumulator:
         if handle is None:                    # stale (timed-out/failed request)
             return
         req = handle.req
+        if req.expired():                     # deadline enforcement (§7)
+            self._finish(handle, DeadlineExceeded(
+                f"request {req.rid} missed its deadline mid-flight"))
+            return
         lo, hi = req.bounds(msg.s)
         self.data_messages += 1
         handle.messages += 1
@@ -167,10 +249,23 @@ class PredictionAccumulator:
             # device partial: weights already applied on-device; the combiner
             # flushes full segments, so this debits count x segment rows
             handle.Y[lo:hi] += msg.P
-            handle.remaining -= msg.count * (hi - lo)
+            rows = msg.count * (hi - lo)
         else:
             self._fold_member(handle, msg, lo, hi)
-            handle.remaining -= int(msg.P.shape[0])
+            rows = int(msg.P.shape[0])
+        handle.remaining -= rows
+        if handle._seg_remaining is not None:
+            left = handle._seg_remaining[msg.s] - rows
+            handle._seg_remaining[msg.s] = left
+            if left == 0:                     # streaming partial: segment done
+                try:
+                    handle.on_segment(msg.s, lo, hi, handle.Y[lo:hi])
+                except Exception as e:
+                    # a raising client callback fails the request (through
+                    # the idempotent finish — never by assigning error
+                    # outside the lock) but must not kill this loop
+                    self._finish(handle, e)
+                    return
         self.timers.add("accumulate", time.perf_counter() - t0)
         if handle.remaining == 0:
             self._finish(handle)

@@ -1,0 +1,72 @@
+"""Two-level priority admission queue (DESIGN.md §7, ROADMAP item a).
+
+The worker batcher's input queue: latency-sensitive requests must not wait
+behind a bulk scan, so admission is class-based instead of strict FIFO —
+``PRIORITY_HIGH`` descriptors drain before ``PRIORITY_NORMAL`` ones, FIFO
+*within* each class (no reordering among equals, so the sender's in-order
+span-reassembly assumption still holds per (request, segment): all of one
+segment's spans are packed in one batcher iteration either way).
+
+The interface mirrors the ``queue.Queue`` subset the batcher uses
+(``put`` / ``get(timeout)`` / ``get_nowait`` / ``qsize``) so control
+sentinels (``SHUTDOWN`` / ``FLUSH``) flow through unchanged at normal
+priority.  Starvation is not a concern at this queue's time scale: high
+priority is meant for sparse latency-sensitive traffic, and a saturating
+high-priority flood is an admission-control problem upstream of the worker.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from collections import deque
+from typing import Optional
+
+from repro.serving.segments import PRIORITY_HIGH, PRIORITY_NORMAL
+
+
+class AdmissionQueue:
+    """Unbounded two-level MPSC queue with ``queue.Queue``-style blocking."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._levels = {PRIORITY_HIGH: deque(), PRIORITY_NORMAL: deque()}
+
+    def put(self, item, priority: int = PRIORITY_NORMAL) -> None:
+        with self._not_empty:
+            self._levels[priority].append(item)
+            self._not_empty.notify()
+
+    def _pop(self):
+        for level in (PRIORITY_HIGH, PRIORITY_NORMAL):
+            q = self._levels[level]
+            if q:
+                return q.popleft()
+        raise queue.Empty
+
+    def get(self, timeout: Optional[float] = None):
+        with self._not_empty:
+            if timeout is None:
+                while not self._size_locked():
+                    self._not_empty.wait()
+            elif not self._not_empty.wait_for(self._size_locked, timeout):
+                raise queue.Empty
+            return self._pop()
+
+    def get_nowait(self):
+        with self._lock:
+            return self._pop()
+
+    def _size_locked(self) -> int:
+        return len(self._levels[PRIORITY_HIGH]) + \
+            len(self._levels[PRIORITY_NORMAL])
+
+    def qsize(self) -> int:
+        with self._lock:
+            return self._size_locked()
+
+    def depth(self, priority: int) -> int:
+        """Backlog of one class (the ``queue_depth.<worker>`` gauge uses
+        ``qsize``; per-class depth feeds tests and adaptive linger)."""
+        with self._lock:
+            return len(self._levels[priority])

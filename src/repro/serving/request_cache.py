@@ -1,9 +1,15 @@
 """Request-level prediction cache (paper §I.B: "to improve performance under
 redundant requests, caching allows avoiding recomputing similar requests").
 
-Keyed by the content hash of each sample row; LRU-bounded.  Integrated by the
-HTTP layer: cached rows are answered immediately, only the misses travel
-through the inference system, and the merged result preserves row order.
+Keyed by the content hash of each sample row; LRU-bounded.  Integrated by
+the EnsembleClient facade and the HTTP layer: cached rows are answered
+immediately, only the misses travel through the inference system, and the
+merged result preserves row order.
+
+A prediction is only reusable under the same ensemble configuration, so
+callers passing per-request options must ``salt`` the key with their
+(members, combine) fingerprint — a member-subset request must never be
+answered with a full-ensemble entry (the facade does this automatically).
 """
 from __future__ import annotations
 
@@ -28,13 +34,14 @@ class PredictionCache:
         self.hits = 0
         self.misses = 0
 
-    def lookup(self, X: np.ndarray) -> Tuple[List[Optional[np.ndarray]], List[int]]:
+    def lookup(self, X: np.ndarray, salt: bytes = b"") -> \
+            Tuple[List[Optional[np.ndarray]], List[int]]:
         """Returns (per-row cached predictions or None, indices of misses)."""
         out: List[Optional[np.ndarray]] = []
         misses: List[int] = []
         with self._lock:
             for i, row in enumerate(X):
-                k = row_key(row)
+                k = row_key(row) + salt
                 hit = self._store.get(k)
                 if hit is not None:
                     self._store.move_to_end(k)
@@ -46,11 +53,12 @@ class PredictionCache:
                     misses.append(i)
         return out, misses
 
-    def insert(self, X: np.ndarray, Y: np.ndarray) -> None:
+    def insert(self, X: np.ndarray, Y: np.ndarray, salt: bytes = b"") -> None:
         with self._lock:
             for row, y in zip(X, Y):
-                self._store[row_key(row)] = np.asarray(y)
-                self._store.move_to_end(row_key(row))
+                k = row_key(row) + salt
+                self._store[k] = np.asarray(y)
+                self._store.move_to_end(k)
             while len(self._store) > self.capacity:
                 self._store.popitem(last=False)
 

@@ -23,11 +23,21 @@ Hot-path extensions (DESIGN.md §3):
     their requests.  A segment's rows may therefore arrive split across
     several messages: ``Message.row_lo`` locates a message's rows inside the
     segment, and downstream accounting counts **rows, not messages**.
+
+Request API (DESIGN.md §7): a :class:`PredictOptions` descriptor expresses
+per-request intent — priority class, deadline, member subset, combine rule,
+cache policy, streaming — and rides on the :class:`Request`, so every stage
+(admission queue, batcher, combiner, accumulator) can honor it.  A batcher
+that pops a descriptor whose request is cancelled or past its deadline posts
+``Message(DROPPED, ...)`` instead of packing rows; the accumulator turns that
+into a :class:`DeadlineExceeded` / :class:`RequestCancelled` result.
 """
 from __future__ import annotations
 
+import threading
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -35,8 +45,87 @@ SHUTDOWN = -1          # segment-ids-queue sentinel: worker must exit
 FLUSH = -3             # segment-ids-queue sentinel: flush open coalesced batch
 OOM = -1               # prediction-queue sentinel: device out of memory
 READY = -2             # prediction-queue sentinel: worker initialized
+DROPPED = -4           # prediction-queue sentinel: batcher dropped an
+                       # expired/cancelled request's segment (carries rid)
 
 DEFAULT_SEGMENT_SIZE = 128      # paper §III: fixed to 128
+
+# admission priority classes (index into the two-level admission queue;
+# lower value = drained first)
+PRIORITY_HIGH = 0
+PRIORITY_NORMAL = 1
+_PRIORITY_NAMES = {"high": PRIORITY_HIGH, "normal": PRIORITY_NORMAL}
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's deadline passed before its prediction completed."""
+
+
+class RequestCancelled(Exception):
+    """The request was cancelled via ``RequestHandle.cancel()``."""
+
+
+def priority_level(priority) -> int:
+    """Normalize a priority spec ("high"/"normal" or the int constants)."""
+    if isinstance(priority, str):
+        try:
+            return _PRIORITY_NAMES[priority]
+        except KeyError:
+            raise ValueError(f"unknown priority {priority!r} "
+                             f"(expected one of {sorted(_PRIORITY_NAMES)})")
+    p = int(priority)
+    if p != priority or p not in (PRIORITY_HIGH, PRIORITY_NORMAL):
+        raise ValueError(f"priority must be high ({PRIORITY_HIGH}) or "
+                         f"normal ({PRIORITY_NORMAL}), got {priority!r}")
+    return p
+
+
+@dataclass(frozen=True)
+class PredictOptions:
+    """Per-request intent, threaded end-to-end through :class:`Request`.
+
+    ``priority``     admission class: "high" requests drain before "normal"
+                     ones (FIFO within a class) and preempt the coalescing
+                     linger;
+    ``deadline_ms``  relative deadline: the request fails fast with
+                     :class:`DeadlineExceeded` once it expires — at
+                     admission, at the batcher (rows are never packed), and
+                     at the accumulator;
+    ``members``      ensemble-member subset (paper §I.B "ensemble
+                     selection"); None = all members;
+    ``combine``      per-request combine rule (mean/weighted/vote/pallas);
+                     None = the system default;
+    ``cache``        prediction-cache policy for clients holding a cache:
+                     "use" (lookup + fill), "bypass" (skip the cache) or
+                     "refresh" (recompute and overwrite);
+    ``stream``       per-segment streaming: ``on_segment(s, lo, hi, Y_seg)``
+                     fires as each segment's ensemble rows complete (set
+                     automatically by ``EnsembleClient.predict_stream``).
+    """
+    priority: object = "normal"
+    deadline_ms: Optional[float] = None
+    members: Optional[Sequence[int]] = None
+    combine: Optional[str] = None
+    cache: str = "use"
+    stream: bool = False
+    on_segment: Optional[Callable] = None
+
+    def __post_init__(self):
+        priority_level(self.priority)       # validate eagerly
+        if self.cache not in ("use", "bypass", "refresh"):
+            raise ValueError(f"unknown cache policy {self.cache!r}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError("deadline_ms must be positive")
+
+    def level(self) -> int:
+        return priority_level(self.priority)
+
+    def deadline_at(self, now: Optional[float] = None) -> Optional[float]:
+        """Absolute ``perf_counter`` deadline, fixed at admission time."""
+        if self.deadline_ms is None:
+            return None
+        return (time.perf_counter() if now is None else now) \
+            + self.deadline_ms * 1e-3
 
 
 def num_segments(nb_samples: int, segment_size: int) -> int:
@@ -78,7 +167,12 @@ class Request:
 
     ``x`` is the request's own input buffer (rows ``[:n]`` valid).  Workers
     slice it zero-copy; because the buffer belongs to the request — not the
-    system — growing a later request can never invalidate it mid-flight."""
+    system — growing a later request can never invalidate it mid-flight.
+
+    ``priority``/``deadline`` come from :class:`PredictOptions` and are read
+    by every pipeline stage; ``cancel_event`` is set by
+    ``RequestHandle.cancel()`` so batchers can drop still-queued descriptors
+    instead of packing rows for a dead request."""
     rid: int
     x: np.ndarray                       # (capacity >= n, seq) int32
     n: int                              # valid samples
@@ -87,6 +181,10 @@ class Request:
     members: List[int]                  # active ensemble members
     weights: Dict[int, float]           # member -> normalized combine weight
     combine: str = "mean"
+    priority: int = PRIORITY_NORMAL
+    deadline: Optional[float] = None    # absolute perf_counter seconds
+    cancel_event: threading.Event = field(default_factory=threading.Event,
+                                          repr=False, compare=False)
 
     def num_segments(self) -> int:
         return num_segments(self.n, self.segment_size)
@@ -94,6 +192,14 @@ class Request:
     def bounds(self, s: int):
         return (start(s, self.segment_size),
                 end(s, self.segment_size, self.n))
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        return self.deadline is not None and \
+            (time.perf_counter() if now is None else now) > self.deadline
+
+    def dropped(self) -> bool:
+        """True when no stage should spend further work on this request."""
+        return self.cancel_event.is_set() or self.expired()
 
 
 @dataclass

@@ -1,14 +1,25 @@
-"""HTTP wrapper + adaptive batching (paper §II.A).
+"""HTTP v2 on the EnsembleClient facade (paper §II.A, DESIGN.md §7).
 
-A minimal REST layer over the inference system (stdlib only):
-  POST /predict   body: {"tokens": [[...], ...]}  -> {"predictions": [[...], ...]}
-  GET  /health    -> {"status": "ok", "workers": N}
-  GET  /allocation -> the allocation matrix
-
-Adaptive batching: requests are buffered until a full segment accumulates OR
-``max_wait_s`` elapses — "triggering prediction before the buffered batch is
-full to improve the latency" (paper §I.B).  Note the buffer granularity is
-the *segment* size, not any single DNN's batch size (paper §II.A).
+Endpoints (stdlib only):
+  POST /v2/predict  body: {"tokens": [[...], ...],
+                           "priority": "high"|"normal",       (optional)
+                           "deadline_ms": float,              (optional)
+                           "members": [model ids],            (optional)
+                           "combine": "mean|weighted|vote|pallas",
+                           "cache": "use|bypass|refresh"}     (optional)
+                    -> {"predictions": [[...], ...]}
+                    (504 when the deadline expires, 400 on bad input)
+  POST /predict     v1 compatibility shim: the original adaptive batcher —
+                    requests buffered until a segment fills or ``max_wait_s``
+                    elapses, then predicted as one batch (paper §I.B).  New
+                    clients should POST /v2/predict: the system's own
+                    coalescing scheduler already does cross-request batching
+                    with per-request options honored.
+  GET  /metrics     serving counters (padding efficiency, rows, batches,
+                    spans), per-worker queue-depth gauges, per-stage
+                    timings, cache hit rates (ROADMAP item d)
+  GET  /health      -> {"status": "ok", "workers": N}
+  GET  /allocation  -> the allocation matrix
 """
 from __future__ import annotations
 
@@ -21,6 +32,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.client import EnsembleClient
+from repro.serving.segments import DeadlineExceeded, PredictOptions
 from repro.serving.system import InferenceSystem
 
 
@@ -29,10 +42,13 @@ class _Pending:
         self.x = x
         self.event = threading.Event()
         self.result: Optional[np.ndarray] = None
+        self.cancelled = False          # submitter gave up (timeout)
 
 
 class AdaptiveBatcher:
-    """Buffers requests into segments; flushes on size or timeout."""
+    """Buffers requests into segments; flushes on size or timeout.  Kept as
+    the v1 ``/predict`` compatibility path — the v2 route goes straight
+    through the facade and relies on the worker-level coalescing scheduler."""
 
     def __init__(self, system: InferenceSystem, *, max_wait_s: float = 0.05,
                  cache=None):
@@ -48,6 +64,10 @@ class AdaptiveBatcher:
         p = _Pending(x)
         self.q.put(p)
         if not p.event.wait(timeout):
+            # mark so the flush loop drops it instead of predicting rows
+            # nobody will collect (the timed-out _Pending used to stay in
+            # the queue and still get predicted)
+            p.cancelled = True
             raise TimeoutError("request timed out")
         return p.result
 
@@ -75,6 +95,7 @@ class AdaptiveBatcher:
                     deadline = time.monotonic() + self.max_wait_s
                 batch.append(p)
                 count += p.x.shape[0]
+            batch = [p for p in batch if not p.cancelled]   # timed-out waiters
             if not batch:
                 continue
             X = np.concatenate([p.x for p in batch], axis=0)
@@ -92,12 +113,30 @@ class AdaptiveBatcher:
                 p.event.set()
 
 
+def _parse_options(payload: dict) -> PredictOptions:
+    """Per-request options from the v2 JSON body (unknown keys ignored)."""
+    kw = {}
+    if "priority" in payload:
+        kw["priority"] = payload["priority"]
+    if payload.get("deadline_ms") is not None:
+        kw["deadline_ms"] = float(payload["deadline_ms"])
+    if payload.get("members") is not None:
+        kw["members"] = [int(m) for m in payload["members"]]
+    if payload.get("combine") is not None:
+        kw["combine"] = str(payload["combine"])
+    if payload.get("cache") is not None:
+        kw["cache"] = str(payload["cache"])
+    return PredictOptions(**kw)
+
+
 def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
           *, max_wait_s: float = 0.05,
           cache=None) -> Tuple[ThreadingHTTPServer, AdaptiveBatcher]:
     """Start the HTTP server (returns immediately; server runs on a thread).
-    ``cache``: optional serving.request_cache.PredictionCache (paper §I.B)."""
+    ``cache``: optional serving.request_cache.PredictionCache (paper §I.B),
+    shared by the v1 shim and the v2 facade."""
     batcher = AdaptiveBatcher(system, max_wait_s=max_wait_s, cache=cache)
+    client = EnsembleClient(system, cache=cache)
 
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, *a):              # quiet
@@ -119,25 +158,46 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
             elif self.path == "/allocation":
                 self._json(200, {"models": system.alloc.model_names,
                                  "A": system.alloc.A.tolist()})
+            elif self.path == "/metrics":
+                self._json(200, {
+                    "counters": system.serving_counters(),
+                    "gauges": system.serving_gauges(),
+                    "stages": system.stage_timings(),
+                    "cache": ({"hits": cache.hits, "misses": cache.misses}
+                              if cache is not None else None)})
             else:
                 self._json(404, {"error": "not found"})
 
+        def _tokens(self, payload) -> np.ndarray:
+            x = np.asarray(payload["tokens"], np.int32)
+            if x.ndim != 2:
+                raise ValueError("tokens must be 2-D (batch, seq)")
+            return x
+
         def do_POST(self):
-            if self.path != "/predict":
-                self._json(404, {"error": "not found"})
-                return
             try:
                 length = int(self.headers.get("Content-Length", 0))
                 payload = json.loads(self.rfile.read(length))
-                x = np.asarray(payload["tokens"], np.int32)
-                if x.ndim != 2:
-                    raise ValueError("tokens must be 2-D (batch, seq)")
-                y = batcher.submit(x)
+                if self.path == "/v2/predict":
+                    x = self._tokens(payload)
+                    opts = _parse_options(payload)
+                    try:
+                        y = client.predict(x, opts)
+                    except DeadlineExceeded as e:
+                        self._json(504, {"error": f"deadline exceeded: {e}"})
+                        return
+                elif self.path == "/predict":   # v1 compatibility shim
+                    x = self._tokens(payload)
+                    y = batcher.submit(x)
+                else:
+                    self._json(404, {"error": "not found"})
+                    return
                 if y is None:
                     self._json(500, {"error": "prediction failed"})
                     return
                 self._json(200, {"predictions": y.tolist()})
-            except (KeyError, ValueError, json.JSONDecodeError) as e:
+            except (KeyError, TypeError, ValueError,
+                    json.JSONDecodeError) as e:
                 self._json(400, {"error": str(e)})
 
     httpd = ThreadingHTTPServer((host, port), Handler)

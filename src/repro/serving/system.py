@@ -37,11 +37,15 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocation import AllocationMatrix
 from repro.serving.accumulator import PredictionAccumulator, RequestHandle
+from repro.serving.admission import AdmissionQueue
 from repro.serving.combiner import DeviceCombiner
 from repro.serving.metrics import StageTimers
 from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, FLUSH, SHUTDOWN,
-                                    Message, Request)
+                                    DeadlineExceeded, Message, PredictOptions,
+                                    Request)
 from repro.serving.worker import Worker
+
+_COMBINE_RULES = ("mean", "weighted", "vote", "pallas")
 
 
 class InferenceSystem:
@@ -58,7 +62,8 @@ class InferenceSystem:
                  device_combine: bool = True,
                  max_in_flight: int = 16,
                  coalesce: bool = True,
-                 max_wait_us: int = 500):
+                 max_wait_us: int = 500,
+                 linger: str = "fixed"):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
@@ -69,6 +74,7 @@ class InferenceSystem:
         self.max_in_flight = max(1, max_in_flight)
         self.coalesce = coalesce
         self.max_wait_us = max_wait_us
+        self.linger = linger
         self.M = len(self.cfgs)
         classes = {c.vocab_size for c in self.cfgs}
         if len(classes) != 1:
@@ -98,11 +104,12 @@ class InferenceSystem:
                     f"d{d}", self.prediction_queue, timers=self.timers)
             w = Worker(f"w{d}.{m}", self.cfgs[m], params_list[m],
                        alloc.devices[d], batch,
-                       queue.Queue(), self.prediction_queue, m,
+                       AdmissionQueue(), self.prediction_queue, m,
                        max_seq, segment_size, fake=fake,
                        frontend=frontends.get(m), use_kernel=use_kernel,
                        combiner=self.combiners.get(d), timers=self.timers,
-                       coalesce=coalesce, max_wait_us=max_wait_us)
+                       coalesce=coalesce, max_wait_us=max_wait_us,
+                       linger=linger)
             self.workers.append(w)
             self._instances[m].append(w)
 
@@ -134,42 +141,80 @@ class InferenceSystem:
         for c in self.combiners.values():
             c.finish(handle.req.rid)
         with self._pool_lock:
-            if len(self._buffer_pool) <= self.max_in_flight:
+            # a cancelled/expired request's buffer may still be read by a
+            # batcher that hasn't popped its descriptors yet — never hand it
+            # to a later request (the versioned-buffer guarantee, §3)
+            if handle.error is None and \
+                    len(self._buffer_pool) <= self.max_in_flight:
                 self._buffer_pool.append(handle.req.x)
         self._inflight.release()
 
-    def _request_weights(self, members: List[int]) -> Dict[int, float]:
+    def _request_weights(self, members: List[int],
+                         combine: str) -> Dict[int, float]:
         """Per-member combine weights, normalized over the active subset
         (paper §I.B "ensemble selection")."""
-        if self.combine == "vote":
+        if combine == "vote":
             return {m: 1.0 / len(members) for m in members}
         base = self.accumulator.weights
         wsum = float(base[members].sum())
         return {m: float(base[m]) / max(wsum, 1e-12) for m in members}
 
     # ---- the segment ids broadcaster -----------------------------------------
-    def _broadcast(self, X: np.ndarray, members=None) -> RequestHandle:
+    def _broadcast(self, X: np.ndarray, members=None,
+                   options: Optional[PredictOptions] = None) -> RequestHandle:
+        opts = options or PredictOptions()
         n, width = X.shape
+        if members is None:
+            members = opts.members
         members = list(range(self.M)) if members is None else list(members)
         if any(m < 0 or m >= self.M for m in members):
             raise ValueError(f"member ids out of range: {members}")
-        self._inflight.acquire()          # bounded in-flight window
+        combine = opts.combine or self.combine
+        if combine not in _COMBINE_RULES:
+            raise ValueError(f"unknown combine rule {combine!r}")
+        deadline = opts.deadline_at()     # fixed at admission
+        remaining = None if deadline is None \
+            else deadline - time.perf_counter()
+        # bounded in-flight window; a deadline bounds the wait for a slot,
+        # and an already-expired request fails fast without enqueuing work
+        if remaining is not None and (
+                remaining <= 0 or
+                not self._inflight.acquire(timeout=remaining)):
+            return self._failed_handle(X, members, combine, DeadlineExceeded(
+                "deadline expired at admission"))
+        if remaining is None:
+            self._inflight.acquire()
         try:
-            return self._submit(X, n, width, members)
+            return self._submit(X, n, width, members, combine, opts, deadline)
         except BaseException:
             self._inflight.release()      # a failed submit must not leak a slot
             raise
 
+    def _failed_handle(self, X, members, combine,
+                       error: BaseException) -> RequestHandle:
+        """A resolved-with-error handle that never entered the pipeline.
+        Built with n=0 so no (n, num_classes) result matrix is allocated
+        just to raise — this is the fail-fast path."""
+        req = Request(-1, X, 0, self.num_classes, self.segment_size,
+                      members, {}, combine)
+        handle = RequestHandle(req)
+        handle.error = error
+        handle._finished = True
+        handle.done.set()
+        return handle
+
     def _submit(self, X: np.ndarray, n: int, width: int,
-                members: List[int]) -> RequestHandle:
+                members: List[int], combine: str, opts: PredictOptions,
+                deadline: Optional[float]) -> RequestHandle:
         with self._submit_lock:
             rid = self._next_rid
             self._next_rid += 1
             buf = self._take_buffer(n, width)
             buf[:n] = X
             req = Request(rid, buf, n, self.num_classes, self.segment_size,
-                          members, self._request_weights(members), self.combine)
-            handle = self.accumulator.begin(req)
+                          members, self._request_weights(members, combine),
+                          combine, priority=opts.level(), deadline=deadline)
+            handle = self.accumulator.begin(req, on_segment=opts.on_segment)
             # static striping: (s, m) -> one instance; makes per-device
             # contribution counts deterministic for the partial combine.
             # Rotating by rid spreads single-segment (small) requests across
@@ -190,23 +235,28 @@ class InferenceSystem:
                 for comb, exp in expected.values():
                     comb.begin(req, exp)
             for w, s in plan:
-                w.input_queue.put((req, s))
+                w.input_queue.put((req, s), req.priority)
         return handle
 
     # ---- modes -----------------------------------------------------------------
-    def predict_async(self, X: np.ndarray, members=None) -> RequestHandle:
+    def predict_async(self, X: np.ndarray, members=None,
+                      options: Optional[PredictOptions] = None) -> RequestHandle:
         """Submit a request without waiting; overlaps with other in-flight
         requests up to ``max_in_flight``.  Returns a handle with
-        ``result(timeout)``."""
+        ``result(timeout)`` and ``cancel()``.  ``options`` carries the
+        per-request intent (priority / deadline / members / combine /
+        streaming — DESIGN.md §7); the ``members`` argument wins over
+        ``options.members`` when both are given."""
         if self._shutdown:
             raise RuntimeError("system is shut down")
-        return self._broadcast(np.asarray(X, np.int32), members)
+        return self._broadcast(np.asarray(X, np.int32), members, options)
 
     def predict(self, X: np.ndarray, timeout: float = 600.0,
-                members=None) -> np.ndarray:
+                members=None,
+                options: Optional[PredictOptions] = None) -> np.ndarray:
         """Deploy Mode.  ``members``: optional model-id subset (paper §I.B
         "ensemble selection" — e.g. a faster accuracy/speed trade-off)."""
-        handle = self.predict_async(X, members)
+        handle = self.predict_async(X, members, options)
         try:
             return handle.result(timeout)
         except MemoryError:

@@ -47,6 +47,18 @@ requests/segments into full compiled batches:
     batcher wait, batch fill, predict dispatch, and device sync/transfer;
     padding counters (``rows_valid`` / ``rows_dispatched``) and the
     ``queue_depth`` gauge expose coalescing efficiency.
+
+Request-API admission (DESIGN.md §7): the input queue is a two-level
+:class:`~repro.serving.admission.AdmissionQueue` — high-priority descriptors
+drain before normal ones, and packing a high-priority request's rows
+*preempts the linger* (the open slot's deadline collapses to "flush as soon
+as the queue runs dry") so a latency-sensitive request never waits out
+``max_wait_us`` behind its own batch.  A descriptor whose request is past
+its deadline or cancelled is dropped instead of packed: the batcher posts
+``Message(DROPPED, ...)`` and the accumulator fails the request, so expired
+work never occupies ring slots or device time.  With ``linger="adaptive"``
+the linger budget scales down with the queue backlog (deep queue → flush
+immediately, idle queue → full ``max_wait_us``; ROADMAP item b).
 """
 from __future__ import annotations
 
@@ -69,6 +81,7 @@ from repro.serving.segments import FLUSH, Message, Request, SHUTDOWN, Span
 MIN_BUCKET = 8
 RING_SLOTS = 4          # in-flight slot bound per worker
 ALT_POOL_CAP = 4        # pooled mismatched-seq buffers per width
+ADAPTIVE_DEPTH = 8      # linger="adaptive": backlog at which linger hits 0
 
 
 def bucket_for(n: int, batch_size: int) -> int:
@@ -116,7 +129,8 @@ class Worker:
                  *, fake: bool = False, frontend: Optional[np.ndarray] = None,
                  use_kernel: bool = False, combiner=None,
                  timers: Optional[StageTimers] = None,
-                 coalesce: bool = True, max_wait_us: int = 500):
+                 coalesce: bool = True, max_wait_us: int = 500,
+                 linger: str = "fixed"):
         self.worker_id = worker_id
         self.cfg = cfg
         self.batch_size = batch_size
@@ -130,6 +144,10 @@ class Worker:
         self.timers = timers or StageTimers()
         self.coalesce = coalesce
         self.linger_s = max(0, max_wait_us) * 1e-6
+        if linger not in ("fixed", "adaptive"):
+            raise ValueError(f"linger must be 'fixed' or 'adaptive', "
+                             f"got {linger!r}")
+        self.linger_mode = linger
         self._depth_gauge = f"queue_depth.{worker_id}"
         self.num_classes = cfg.vocab_size
         self._batch_q: "queue.Queue" = queue.Queue(maxsize=4)
@@ -198,6 +216,17 @@ class Worker:
             t.join(timeout)
 
     # ---- batch slots ---------------------------------------------------------
+    def _effective_linger(self) -> float:
+        """Linger budget for a freshly-opened slot.  ``adaptive`` scales the
+        configured ``max_wait_us`` down linearly with the input backlog: a
+        deep queue means more rows are already on the way (no need to wait
+        for them — they arrive this drain) while an idle queue earns the
+        full linger to give concurrent requests a chance to coalesce."""
+        if self.linger_mode == "adaptive":
+            depth = self.input_queue.qsize()
+            return self.linger_s * max(0.0, 1.0 - depth / ADAPTIVE_DEPTH)
+        return self.linger_s
+
     def _open_batch(self, width: int) -> _OpenBatch:
         if width == self._ring[0].shape[1]:
             slot = self._free_slots.get()
@@ -210,7 +239,7 @@ class Worker:
             if buf is None:
                 buf = np.zeros((self._span, width), np.int32)
         return _OpenBatch(slot, buf, width,
-                          time.perf_counter() + self.linger_s)
+                          time.perf_counter() + self._effective_linger())
 
     def _recycle(self, slot: Optional[int], buf: np.ndarray) -> None:
         if slot is not None:
@@ -273,6 +302,13 @@ class Worker:
                     open_batch = None
                 continue
             req, s = item                     # type: Request, int
+            if req.dropped():
+                # expired/cancelled: never pack rows — fail fast instead of
+                # occupying ring slots (idempotent across workers/segments)
+                self.prediction_queue.put(Message(
+                    seg.DROPPED, None, None, rid=req.rid))
+                self.timers.timed("batch_fill", t0)
+                continue
             lo, hi = req.bounds(s)
             width = req.x.shape[1]
             pos = lo
@@ -297,6 +333,11 @@ class Worker:
                 if f == self._span:
                     self._flush(open_batch)   # full slot: flush immediately
                     open_batch = None
+            if open_batch is not None and req.priority == seg.PRIORITY_HIGH:
+                # high-priority rows preempt the linger: flush as soon as
+                # the queue runs dry instead of waiting out max_wait_us
+                # (anything already queued still coalesces first)
+                open_batch.deadline = 0.0
             if not self.coalesce and open_batch is not None:
                 self._flush(open_batch)       # PR-1 semantics: per-item flush
                 open_batch = None

@@ -1,6 +1,8 @@
-"""HTTP wrapper + adaptive batching tests."""
+"""HTTP wrapper tests: the v2 request API (per-request options, /metrics)
+plus the v1 /predict adaptive-batching compatibility shim."""
 import json
 import threading
+import urllib.error
 import urllib.request
 
 import jax
@@ -10,6 +12,9 @@ import pytest
 import repro.models as M
 from repro.configs import ensemble
 from repro.core import AllocationMatrix, host_cpus
+from repro.serving.client import EnsembleClient
+from repro.serving.request_cache import PredictionCache
+from repro.serving.segments import DeadlineExceeded, PredictOptions
 from repro.serving.server import serve
 from repro.serving.system import InferenceSystem
 
@@ -87,3 +92,64 @@ def test_adaptive_batching_coalesces(server):
     assert len(results) == 4
     for y in results.values():
         assert y.shape == (2, 512)
+
+
+# ---- the v2 request API ------------------------------------------------------
+
+def test_v2_predict_roundtrip(server):
+    x = np.random.default_rng(20).integers(0, 512, (3, SEQ)).tolist()
+    r = _post("/v2/predict", {"tokens": x, "priority": "high",
+                              "members": [0], "deadline_ms": 60_000})
+    y = np.asarray(r["predictions"])
+    assert y.shape == (3, 512) and np.isfinite(y).all()
+    # v1 and v2 agree on the same input
+    r1 = _post("/predict", {"tokens": x})
+    np.testing.assert_allclose(y, np.asarray(r1["predictions"]), atol=1e-5)
+
+
+def test_v2_deadline_exceeded_is_504(server):
+    x = np.zeros((2, SEQ), np.int32).tolist()
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post("/v2/predict", {"tokens": x, "deadline_ms": 1e-4})
+    assert ei.value.code == 504
+
+
+def test_v2_bad_options_are_400(server):
+    x = np.zeros((1, SEQ), np.int32).tolist()
+    for bad in ({"priority": "urgent"}, {"combine": "median"},
+                {"members": [7]}, {"cache": "maybe"},
+                {"priority": 1.5}, {"members": 7}):   # wrong-typed -> 400 too
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post("/v2/predict", {"tokens": x, **bad})
+        assert ei.value.code == 400, bad
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post("/v2/predict", {"tokens": None})
+    assert ei.value.code == 400
+
+
+def test_metrics_endpoint(server):
+    x = np.random.default_rng(21).integers(0, 512, (4, SEQ)).tolist()
+    _post("/v2/predict", {"tokens": x})
+    m = _get("/metrics")
+    assert 0 < m["counters"]["padding_efficiency"] <= 1.0
+    assert m["counters"]["rows_valid"] > 0
+    assert any(k.startswith("queue_depth.") for k in m["gauges"])
+    assert "accumulate" in m["stages"]
+
+
+def test_http_client_facade(server):
+    """EnsembleClient over the HTTP transport: sync, async, options, and a
+    client-side cache; metrics() proxies GET /metrics."""
+    client = EnsembleClient(url=f"http://127.0.0.1:{PORT}",
+                            cache=PredictionCache(capacity=64))
+    X = np.random.default_rng(22).integers(0, 512, (3, SEQ)).astype(np.int32)
+    y1 = client.predict(X, PredictOptions(priority="high"))
+    assert y1.shape == (3, 512)
+    h = client.predict_async(X)                 # all rows now cached
+    np.testing.assert_allclose(h.result(60.0), y1, atol=1e-6)
+    assert client.cache.hits == 3
+    with pytest.raises(DeadlineExceeded):
+        client.predict(X, PredictOptions(deadline_ms=1e-4, cache="bypass"))
+    assert client.metrics()["counters"]["rows_valid"] > 0
+    with pytest.raises(ValueError, match="in-process"):
+        client.predict_stream(X, lambda *a: None)
