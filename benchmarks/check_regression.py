@@ -26,6 +26,9 @@ import sys
 # better than strict FIFO (absolute floor; the wide relative tolerance
 # absorbs cross-runner tail-latency noise on the committed baseline) with
 # total throughput within 10% of FIFO (0.90 absolute floor).
+# skewed_load gates the ISSUE-4 acceptance: work stealing >= 1.3x throughput
+# under a 4:1 per-member load skew (absolute floor; the scenario runs on
+# simulated device time, so it is deterministic across runners).
 GATED_METRICS = [
     ("speedup", None, None),                  # pipelined engine vs seed
     ("large_request_ratio", None, 0.90),      # coalesced vs PR-1, big request
@@ -33,6 +36,7 @@ GATED_METRICS = [
     ("many_small.coalesced.padding_efficiency", 0.15, None),
     ("mixed_priority.hp_p99_improvement", 0.70, 3.0),
     ("mixed_priority.throughput_ratio", None, 0.90),
+    ("skewed_load.steal_throughput_ratio", None, 1.30),
 ]
 
 

@@ -22,7 +22,20 @@ transfers, combination.  Scenarios:
                     trace twice — all-normal (strict FIFO, the PR-2
                     behavior) vs the small requests at ``priority="high"``
                     — and reports per-class p50/p99 latency plus total
-                    segments/sec.
+                    segments/sec;
+  * ``skewed_load``  the elasticity workload (ISSUE 4, ROADMAP items c/g):
+                    one hot member under a 4:1 per-member request skew,
+                    served by a slow batch-8 instance (co-located with the
+                    cold member) and a fast batch-128 data-parallel sibling.
+                    Fake workers with *simulated device time*
+                    (``fake_delay_us`` per compiled batch — the sleep
+                    releases the GIL, so worker parallelism and service
+                    rates are deterministic on any host) isolate the
+                    scheduling effect: static striping leaves half the hot
+                    member's segments queued behind the slow instance while
+                    the fast sibling idles.  Runs the identical trace with
+                    the work-stealing fast path off vs on and reports the
+                    throughput ratio.
 
 Acceptance (ISSUE 2): many_small coalesced >= 1.5x the PR-1 engine
 segments/sec; single large-request throughput within 5% (the
@@ -30,6 +43,8 @@ segments/sec; single large-request throughput within 5% (the
 Acceptance (ISSUE 3): high-priority p99 improves >= 3x over FIFO while total
 segments/sec stays within 10% (``mixed_priority.hp_p99_improvement`` /
 ``.throughput_ratio`` in BENCH_serving.json, gated by check_regression.py).
+Acceptance (ISSUE 4): work stealing >= 1.3x throughput under the 4:1 skew
+(``skewed_load.steal_throughput_ratio``, gated by check_regression.py).
 """
 from __future__ import annotations
 
@@ -157,9 +172,53 @@ def _measure_mixed_priority(system, bulk_X, small_Xs, rounds: int,
     }
 
 
+def _measure_skewed(cfgs, params, devs, seq: int, requests: int,
+                    fake_delay_us: int, steal: bool) -> dict:
+    """One skewed_load pass: 4:1 per-member request skew against a hot
+    member with heterogeneous data-parallel instances (d0@8 slow, d1@128
+    fast); the cold member rides the slow device.  With ``steal`` the
+    reconfiguration controller's fast path re-routes the slow instance's
+    backlog (expected-row maps move between the device combiners)."""
+    from repro.serving.control import ReconfigController
+    from repro.serving.system import InferenceSystem
+
+    seg_sz = 128
+    A = np.array([[8, 128], [128, 0]])
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    srng = np.random.default_rng(4)
+    member_lists = [[0] if i % 5 < 4 else [1] for i in range(requests)]
+    Xs = [srng.integers(0, 512, (seg_sz, seq)).astype(np.int32)
+          for _ in member_lists]
+    with InferenceSystem(cfgs, params, alloc, segment_size=seg_sz,
+                         max_seq=seq, fake=True,
+                         fake_delay_us=fake_delay_us,
+                         max_in_flight=requests, max_wait_us=200) as system:
+        controller = ReconfigController(
+            system, replan=False, steal=steal, steal_interval_s=0.001,
+            steal_threshold=1, steal_max=64)
+        controller.start()
+        for _ in range(3):                 # warm the live latency profile
+            system.predict(Xs[0], members=[0])
+            system.predict(Xs[1], members=[1])
+        t0 = time.perf_counter()
+        handles = [system.predict_async(x, members=m)
+                   for x, m in zip(Xs, member_lists)]
+        for h in handles:
+            h.result(600.0)
+        dt = time.perf_counter() - t0
+        stolen = controller.counters["stolen"]
+    return {
+        "requests": requests,
+        "seconds": dt,
+        "segments_per_sec": requests / dt,   # single-segment requests
+        "stolen_descriptors": stolen,
+    }
+
+
 def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
         small_concurrency=48, small_rounds=8, small_max_wait_us=2000,
-        mixed_rounds=3, mixed_smalls=8, mixed_bulk=1024):
+        mixed_rounds=3, mixed_smalls=8, mixed_bulk=1024,
+        skew_requests=40, skew_delay_us=4000):
     import jax
     import repro.models as M
     from repro.serving.system import InferenceSystem
@@ -233,6 +292,18 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
                                  mixed["fifo"]["segments_per_sec"])
     results["mixed_priority"] = mixed
 
+    # ---- skewed_load: one hot member, work stealing off vs on (ISSUE 4) -----
+    skew_devs = host_cpus(2, memory_bytes=8 * GiB)
+    skewed = {}
+    for mode, steal in (("no_steal", False), ("steal", True)):
+        skewed[mode] = _measure_skewed(small_cfgs, small_params, skew_devs,
+                                       seq, skew_requests, skew_delay_us,
+                                       steal)
+    skewed["steal_throughput_ratio"] = (
+        skewed["steal"]["segments_per_sec"] /
+        skewed["no_steal"]["segments_per_sec"])
+    results["skewed_load"] = skewed
+
     if csv:
         print("serving_hotpath:variant,segments_per_sec,messages_per_request")
         for name in ("seed", "pipelined", "coalesced"):
@@ -261,6 +332,13 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
               f"{mixed['hp_p99_improvement']:.2f},")
         print(f"serving_hotpath:mixed_priority.throughput_ratio,"
               f"{mixed['throughput_ratio']:.3f},")
+        for mode in ("no_steal", "steal"):
+            r = skewed[mode]
+            print(f"serving_hotpath:skewed_load.{mode},"
+                  f"{r['segments_per_sec']:.1f},"
+                  f"{r['stolen_descriptors']}")
+        print(f"serving_hotpath:skewed_load.steal_throughput_ratio,"
+              f"{skewed['steal_throughput_ratio']:.2f},")
         for name in ("pipelined", "coalesced"):
             for stage, t in results[name]["stage_timings"].items():
                 print(f"serving_hotpath:{name}.{stage},"

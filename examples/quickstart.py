@@ -77,6 +77,13 @@ def main():
         client.predict(X)
         print("cache after repeat:", client.metrics()["cache"])
 
+    # Going further: the allocation above is frozen at deploy time.  When
+    # the live workload drifts (one member runs hot, traffic spikes), attach
+    # the online reconfiguration controller — live replanning + instance
+    # migration + cross-worker work stealing (DESIGN.md §8):
+    #     python examples/serve_ensemble.py --reconfig
+    #     python -m repro.launch.serve --reconfig
+
 
 if __name__ == "__main__":
     main()

@@ -35,6 +35,11 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--combine", default="mean")
     ap.add_argument("--devices", type=int, default=2)
+    ap.add_argument("--reconfig", action="store_true",
+                    help="attach the online reconfiguration controller "
+                         "(live replanning + cross-worker work stealing, "
+                         "DESIGN.md §8); its stats appear under "
+                         "'controller' in GET /metrics")
     args = ap.parse_args()
 
     cfgs = ensemble(args.ensemble)[: args.members]
@@ -54,6 +59,11 @@ def main():
 
     system = InferenceSystem(cfgs, params, result.matrix, segment_size=32,
                              max_seq=SEQ, combine=args.combine)
+    if args.reconfig:
+        from repro.serving.control import ReconfigController
+        ReconfigController(system, interval_s=2.0,
+                           batch_sizes=(8, 16)).start()
+        print("reconfig controller attached (replan + work stealing)")
     httpd, batcher = serve(system, port=args.port, max_wait_s=0.05)
     print(f"serving on http://127.0.0.1:{args.port}")
 
@@ -99,6 +109,10 @@ def main():
         f"http://127.0.0.1:{args.port}/metrics"))
     print(f"padding efficiency: "
           f"{metrics['counters'].get('padding_efficiency', 1.0):.3f}")
+    if args.reconfig and metrics.get("controller"):
+        ctl = metrics["controller"]
+        print(f"reconfig: generation={ctl['generation']} "
+              f"counters={ctl['counters']}")
     httpd.shutdown()
     batcher.stop()
     system.shutdown()

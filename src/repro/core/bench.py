@@ -1,6 +1,6 @@
 """``bench(A, calib_data) -> throughput`` — the greedy's scoring function.
 
-Two backends (DESIGN.md §2/§8.1):
+Two backends (DESIGN.md §2/§9.1):
 
 * ``MeasuredBench`` — the paper's: instantiate the inference system in
   Benchmark Mode on calibration samples and time it.  Used on this container
@@ -23,6 +23,25 @@ from repro.core import memory as mem
 from repro.core.allocation import AllocationMatrix
 
 Bench = Callable[[AllocationMatrix], float]
+
+
+def per_model_throughput(alloc: AllocationMatrix,
+                         worker_time: Callable[[int, int, int], float]
+                         ) -> list:
+    """The shared cycle model: co-located workers time-share their device
+    round-robin (a device's cycle time is the sum of its workers'
+    latencies) and a model's throughput adds over its data-parallel
+    instances.  ``worker_time(d, m, batch)`` supplies the per-batch latency
+    — the roofline for :class:`AnalyticBench`, measured EWMAs for the
+    serving layer's live bench — so the offline allocator and the online
+    replanner score matrices under one cost model."""
+    cycle = [0.0] * len(alloc.devices)
+    for d, m, b in alloc.workers():
+        cycle[d] += worker_time(d, m, b)
+    per_model = [0.0] * len(alloc.model_names)
+    for d, m, b in alloc.workers():
+        per_model[m] += b / cycle[d]
+    return per_model
 
 
 class AnalyticBench:
@@ -60,12 +79,9 @@ class AnalyticBench:
             return 0.0
         if not mem.fit_mem(alloc, self.cfgs, self.seq, self.dtype_bytes):
             return 0.0
-        cycle = [0.0] * len(alloc.devices)
-        for d, m, b in alloc.workers():
-            cycle[d] += self.worker_time(alloc.devices[d], self.cfgs[m], b)
-        per_model = [0.0] * len(alloc.model_names)
-        for d, m, b in alloc.workers():
-            per_model[m] += b / cycle[d]
+        per_model = per_model_throughput(
+            alloc, lambda d, m, b: self.worker_time(alloc.devices[d],
+                                                    self.cfgs[m], b))
         return min(per_model)
 
 
@@ -105,7 +121,7 @@ class MeasuredBench:
 
 
 class MemoBench:
-    """Memoizing wrapper (beyond-paper §8.5): identical matrices are scored
+    """Memoizing wrapper (beyond-paper): identical matrices are scored
     once.  The paper re-runs the 40 s benchmark on revisits."""
 
     def __init__(self, inner: Bench):

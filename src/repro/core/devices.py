@@ -67,7 +67,7 @@ def host_cpus(n: int = 1, memory_bytes: int = 16 * GiB) -> list:
 def tpu_cells(mesh_devices: Sequence, cell_size: int, *,
               memory_bytes: int = TPU_V5E_HBM_BYTES) -> list:
     """Partition a flat device list into model-parallel cells of ``cell_size``
-    chips each — the beyond-paper 'cells' extension (DESIGN.md §8.2)."""
+    chips each — the beyond-paper 'cells' extension (DESIGN.md §9.2)."""
     cells = []
     flat = list(mesh_devices)
     for i in range(0, len(flat) - cell_size + 1, cell_size):

@@ -2,7 +2,7 @@
 
 Per-worker footprint = params + activation workspace (batch-dependent) +
 decode KV/SSM cache (batch- and seq-dependent — our beyond-paper extension
-for stateful LLM serving, DESIGN.md §8.3).
+for stateful LLM serving, DESIGN.md §9.3).
 """
 from __future__ import annotations
 

@@ -32,6 +32,18 @@ def main(argv=None):
                     help="coalescing linger bound per open batch slot")
     ap.add_argument("--cache-capacity", type=int, default=0,
                     help="rows in the prediction cache (0 disables)")
+    ap.add_argument("--reconfig", action="store_true",
+                    help="run the online reconfiguration controller: live "
+                         "replanning against the EWMA workload profile plus "
+                         "cross-worker work stealing (DESIGN.md §8)")
+    ap.add_argument("--reconfig-interval", type=float, default=5.0,
+                    help="seconds between live replans (with --reconfig)")
+    ap.add_argument("--steal-threshold", type=int, default=4,
+                    help="queue-depth gap between data-parallel siblings "
+                         "that triggers work stealing (with --reconfig)")
+    ap.add_argument("--no-steal", action="store_true",
+                    help="disable the work-stealing fast path (replanning "
+                         "only, with --reconfig)")
     args = ap.parse_args(argv)
 
     import jax
@@ -82,6 +94,17 @@ def main(argv=None):
                              max_seq=args.seq, combine=args.combine,
                              max_wait_us=args.max_wait_us,
                              linger=args.linger)
+    controller = None
+    if args.reconfig:
+        from repro.serving.control import ReconfigController
+        controller = ReconfigController(
+            system, interval_s=args.reconfig_interval,
+            steal_threshold=args.steal_threshold,
+            steal=not args.no_steal, batch_sizes=(8, 16, 32)).start()
+        print(f"reconfig controller on (replan every "
+              f"{args.reconfig_interval:.1f}s, steal "
+              f"{'off' if args.no_steal else 'on'}; see GET /metrics "
+              f"'controller')")
     cache = PredictionCache(args.cache_capacity) if args.cache_capacity else None
     httpd, batcher = serve(system, port=args.port, cache=cache)
     print(f"serving {len(cfgs)} models / {len(system.workers)} workers on "

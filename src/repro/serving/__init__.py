@@ -14,6 +14,7 @@ from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, PRIORITY_HIGH,
 from repro.serving.server import AdaptiveBatcher, serve
 from repro.serving.system import InferenceSystem
 from repro.serving.worker import Worker, bucket_for, make_predict_fn
+from repro.serving.control import LiveBench, ReconfigController
 
 __all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
            "Message", "Request", "RequestHandle", "PredictionAccumulator",
@@ -21,4 +22,4 @@ __all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
            "DEFAULT_SEGMENT_SIZE", "PredictOptions", "EnsembleClient",
            "ClientHandle", "AdmissionQueue", "PredictionCache",
            "DeadlineExceeded", "RequestCancelled", "PRIORITY_HIGH",
-           "PRIORITY_NORMAL"]
+           "PRIORITY_NORMAL", "LiveBench", "ReconfigController"]

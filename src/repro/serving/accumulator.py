@@ -10,7 +10,7 @@ per-request ensemble prediction.  Two message kinds (DESIGN.md §§3-4):
     paper's {s, m, P} triplet, folded under the request's combine rule —
     "mean"/"weighted" (``Y += w_m P``), "vote" (majority voting on argmax),
     or "pallas" (buffer the segment's M member predictions, then fuse the
-    weighted combine in the ensemble_combine Pallas kernel, DESIGN.md §8.4).
+    weighted combine in the ensemble_combine Pallas kernel, DESIGN.md §9.4).
 
 Under the coalescing scheduler one member's segment may arrive split across
 several messages (each tagged with ``row_lo``), so completion accounting

@@ -65,6 +65,46 @@ class AdmissionQueue:
         with self._lock:
             return self._size_locked()
 
+    def steal(self, max_items: int) -> list:
+        """Pop up to ``max_items`` of the NEWEST normal-priority segment
+        descriptors off the tail, preserving their relative order (DESIGN.md
+        §8: cross-worker work stealing).  Tail-stealing takes the work that
+        would otherwise wait longest and leaves the victim's head untouched,
+        so descriptors the batcher is about to drain are never contended.
+        The sweep walks tail-ward until it meets a non-descriptor item and
+        stops there: it can only take descriptors enqueued *after* the last
+        sentinel, and a queue whose tail IS a sentinel (``SHUTDOWN`` /
+        ``FLUSH`` just posted — the worker is draining or being quiesced)
+        yields nothing.  Sentinels themselves are never popped or reordered.
+        Atomic with respect to the consumer: a descriptor is owned either by
+        the thief or by the batcher, never both."""
+        with self._lock:
+            q = self._levels[PRIORITY_NORMAL]
+            stolen = []
+            while q and len(stolen) < max_items and isinstance(q[-1], tuple):
+                stolen.append(q.pop())
+        stolen.reverse()
+        return stolen
+
+    def drain_descriptors(self) -> list:
+        """Pop EVERY queued segment descriptor, both priority classes
+        (drain-side instance migration — unlike :meth:`steal`, a retiring
+        worker's latency-sensitive work must move too, or exactly the
+        high-priority class would pay the victim's full drain latency).
+        High-priority descriptors first, FIFO within each class; re-putting
+        with each request's own priority restores class order at the
+        destination.  Sentinels (``SHUTDOWN``/``FLUSH``/barriers) stay in
+        place in their relative order — the retiring batcher still owes
+        their acknowledgements."""
+        out = []
+        with self._lock:
+            for level in (PRIORITY_HIGH, PRIORITY_NORMAL):
+                keep = deque()
+                for item in self._levels[level]:
+                    (out if isinstance(item, tuple) else keep).append(item)
+                self._levels[level] = keep
+        return out
+
     def depth(self, priority: int) -> int:
         """Backlog of one class (the ``queue_depth.<worker>`` gauge uses
         ``qsize``; per-class depth feeds tests and adaptive linger)."""

@@ -246,10 +246,12 @@ class EnsembleClient:
         if self.system is not None:
             # same shape as the server's GET /metrics, so code written
             # against one transport reads the other
+            ctl = self.system.controller
             return {"counters": self.system.serving_counters(),
                     "gauges": self.system.serving_gauges(),
                     "stages": self.system.stage_timings(),
                     "cache": ({"hits": self.cache.hits,
                                "misses": self.cache.misses}
-                              if self.cache is not None else None)}
+                              if self.cache is not None else None),
+                    "controller": ctl.stats() if ctl is not None else None}
         return self._http_json("GET", "/metrics")

@@ -78,6 +78,53 @@ class DeviceCombiner:
             for key in [k for k in self._parts if k[0] == rid]:
                 del self._parts[key]
 
+    # ---- expected-map migration (work stealing, DESIGN.md §8) ----------------
+    def unexpect(self, req: Request, s: int) -> bool:
+        """Remove ONE expected member contribution for (``req``, ``s``) — the
+        inverse of one unit of :meth:`begin` — because its queued descriptor
+        was re-routed to a data-parallel sibling on another device.  Returns
+        False when the request is no longer tracked here (completed or torn
+        down), in which case the caller must not register the expectation
+        elsewhere.  If other members' rows already closed the reduced row
+        count, the partial flushes immediately — exactly the message the
+        accumulator would have seen had the stolen member never been striped
+        to this device."""
+        flush = None
+        with self._lock:
+            expected = self._expected.get(req.rid)
+            if expected is None or s not in expected:
+                return False
+            count, want_rows = expected[s]
+            lo, hi = req.bounds(s)
+            count -= 1
+            want_rows -= hi - lo
+            part = self._parts.get((req.rid, s))
+            if count <= 0:
+                # no member left on this device: nothing can have been folded
+                # (each (segment, member) routes to exactly one instance)
+                self._parts.pop((req.rid, s), None)
+                del expected[s]
+            elif part is not None and part.rows >= want_rows:
+                flush = (part, count)
+                del self._parts[(req.rid, s)]
+                del expected[s]
+            else:
+                expected[s] = (count, want_rows)
+            if not expected:
+                del self._expected[req.rid]
+        if flush is not None:
+            self._post(req.rid, s, *flush)
+        return True
+
+    def expect_one(self, req: Request, s: int) -> None:
+        """Register one additional expected member contribution for
+        (``req``, ``s``) — the destination side of a stolen descriptor."""
+        lo, hi = req.bounds(s)
+        with self._lock:
+            expected = self._expected.setdefault(req.rid, {})
+            count, want_rows = expected.get(s, (0, 0))
+            expected[s] = (count + 1, want_rows + (hi - lo))
+
     # ---- the fold ------------------------------------------------------------
     def add(self, req: Request, s: int, m: int, P, row_lo: int = 0) -> None:
         """Fold member ``m``'s rows ``[row_lo, row_lo+len(P))`` of segment
@@ -107,13 +154,15 @@ class DeviceCombiner:
                 if not expected:
                     del self._expected[req.rid]
         if flush is not None:
-            # the single device->host transfer per device per segment
-            part, count = flush
-            self.prediction_queue.put(Message(
-                s, None, np.asarray(part.acc), rid=req.rid, count=count))
-            self.partials_posted += 1
+            self._post(req.rid, s, *flush)
         if self.timers is not None:
             self.timers.add("combine", time.perf_counter() - t0)
+
+    def _post(self, rid: int, s: int, part: _SegPartial, count: int) -> None:
+        """The single device->host transfer per device per segment."""
+        self.prediction_queue.put(Message(
+            s, None, np.asarray(part.acc), rid=rid, count=count))
+        self.partials_posted += 1
 
     @staticmethod
     def _contribution(req: Request, P, w: float):

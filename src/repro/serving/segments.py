@@ -57,6 +57,18 @@ PRIORITY_NORMAL = 1
 _PRIORITY_NAMES = {"high": PRIORITY_HIGH, "normal": PRIORITY_NORMAL}
 
 
+class FlushBarrier:
+    """An acknowledged FLUSH: the batcher closes any open coalesced slot and
+    then sets ``done``.  ``InferenceSystem.quiesce(wait=True)`` and the
+    reconfiguration controller's drain path use it as a barrier — unlike the
+    fire-and-forget ``FLUSH`` int, the caller can block until every batcher
+    has actually processed the flush (DESIGN.md §8)."""
+    __slots__ = ("done",)
+
+    def __init__(self):
+        self.done = threading.Event()
+
+
 class DeadlineExceeded(TimeoutError):
     """The request's deadline passed before its prediction completed."""
 

@@ -159,12 +159,15 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
                 self._json(200, {"models": system.alloc.model_names,
                                  "A": system.alloc.A.tolist()})
             elif self.path == "/metrics":
+                ctl = system.controller
                 self._json(200, {
                     "counters": system.serving_counters(),
                     "gauges": system.serving_gauges(),
                     "stages": system.stage_timings(),
                     "cache": ({"hits": cache.hits, "misses": cache.misses}
-                              if cache is not None else None)})
+                              if cache is not None else None),
+                    # online reconfiguration observability (DESIGN.md §8)
+                    "controller": ctl.stats() if ctl is not None else None})
             else:
                 self._json(404, {"error": "not found"})
 

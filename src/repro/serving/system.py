@@ -40,9 +40,9 @@ from repro.serving.accumulator import PredictionAccumulator, RequestHandle
 from repro.serving.admission import AdmissionQueue
 from repro.serving.combiner import DeviceCombiner
 from repro.serving.metrics import StageTimers
-from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, FLUSH, SHUTDOWN,
-                                    DeadlineExceeded, Message, PredictOptions,
-                                    Request)
+from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, FLUSH, FlushBarrier,
+                                    SHUTDOWN, DeadlineExceeded, Message,
+                                    PredictOptions, Request)
 from repro.serving.worker import Worker
 
 _COMBINE_RULES = ("mean", "weighted", "vote", "pallas")
@@ -63,7 +63,8 @@ class InferenceSystem:
                  max_in_flight: int = 16,
                  coalesce: bool = True,
                  max_wait_us: int = 500,
-                 linger: str = "fixed"):
+                 linger: str = "fixed",
+                 fake_delay_us: int = 0):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
@@ -76,6 +77,15 @@ class InferenceSystem:
         self.max_wait_us = max_wait_us
         self.linger = linger
         self.M = len(self.cfgs)
+        # retained for live instance spawn/drain (DESIGN.md §8)
+        self._params_list = list(params_list)
+        self._frontends = dict(frontends or {})
+        self._fake = fake
+        self._fake_delay_us = fake_delay_us
+        self._use_kernel = use_kernel
+        self.generation = 0              # bumped by each applied reconfig
+        self.controller = None           # attached ReconfigController, if any
+        self._profiler = None            # attached LiveBench sink, if any
         classes = {c.vocab_size for c in self.cfgs}
         if len(classes) != 1:
             raise ValueError(f"ensemble members disagree on class count: {classes}")
@@ -97,19 +107,11 @@ class InferenceSystem:
         self.combiners: Dict[int, DeviceCombiner] = {}
         self.workers: List[Worker] = []
         self._instances: Dict[int, List[Worker]] = {m: [] for m in range(self.M)}
-        frontends = frontends or {}
         for d, m, batch in alloc.workers():
             if device_combine and d not in self.combiners:
                 self.combiners[d] = DeviceCombiner(
                     f"d{d}", self.prediction_queue, timers=self.timers)
-            w = Worker(f"w{d}.{m}", self.cfgs[m], params_list[m],
-                       alloc.devices[d], batch,
-                       AdmissionQueue(), self.prediction_queue, m,
-                       max_seq, segment_size, fake=fake,
-                       frontend=frontends.get(m), use_kernel=use_kernel,
-                       combiner=self.combiners.get(d), timers=self.timers,
-                       coalesce=coalesce, max_wait_us=max_wait_us,
-                       linger=linger)
+            w = self._make_worker(d, m, batch, generation=0)
             self.workers.append(w)
             self._instances[m].append(w)
 
@@ -120,6 +122,108 @@ class InferenceSystem:
         if not self.accumulator.all_ready.wait(ready_timeout):
             raise TimeoutError("workers failed to initialize")
         self._shutdown = False
+
+    # ---- live topology (online reconfiguration, DESIGN.md §8) ----------------
+    def _make_worker(self, d: int, m: int, batch: int, *,
+                     generation: int, oom_sentinel: bool = True) -> Worker:
+        """Construct (and warm up) one worker; does NOT register it for
+        routing.  The warm-up compile runs in the constructor, so a returned
+        worker is immediately servable."""
+        w = Worker(f"w{d}.{m}.g{generation}" if generation else f"w{d}.{m}",
+                   self.cfgs[m], self._params_list[m],
+                   self.alloc.devices[d], batch,
+                   AdmissionQueue(), self.prediction_queue, m,
+                   self.max_seq, self.segment_size, fake=self._fake,
+                   frontend=self._frontends.get(m),
+                   use_kernel=self._use_kernel,
+                   combiner=self.combiners.get(d), timers=self.timers,
+                   coalesce=self.coalesce, max_wait_us=self.max_wait_us,
+                   linger=self.linger, generation=generation,
+                   profiler=self._profiler, oom_sentinel=oom_sentinel,
+                   fake_delay_us=self._fake_delay_us)
+        w.device_idx = d
+        return w
+
+    def spawn_instance(self, d: int, m: int, batch_size: int, *,
+                       generation: Optional[int] = None) -> Worker:
+        """Live-add a data-parallel instance of member ``m`` on device ``d``
+        at ``batch_size`` without touching in-flight requests.  The worker
+        warms up (compiles) *before* it is atomically spliced into the
+        routing tables, so the first request striped to it never waits on
+        compilation.  Raises (without failing in-flight requests) when the
+        device cannot host it."""
+        if self._shutdown:
+            raise RuntimeError("system is shut down")
+        gen = self.generation if generation is None else generation
+        if self.device_combine:
+            # registered before any descriptor can route to the new worker
+            # (_make_worker and _on_request_complete read self.combiners)
+            with self._submit_lock:
+                if d not in self.combiners:
+                    self.combiners[d] = DeviceCombiner(
+                        f"d{d}", self.prediction_queue, timers=self.timers)
+        # warm-up compile outside the routing lock: submission stays live
+        w = self._make_worker(d, m, batch_size, generation=gen,
+                              oom_sentinel=False)
+        w.start()
+        with self._submit_lock:
+            if self._shutdown:
+                registered = False        # shut down during our warm-up:
+            else:                         # never splice into a dead system
+                self.workers.append(w)
+                self._instances[m].append(w)
+                self.alloc.A[d, m] = batch_size
+                registered = True
+        if not registered:
+            w.input_queue.put(SHUTDOWN)   # tear the probe worker down
+            raise RuntimeError("system shut down during spawn_instance")
+        return w
+
+    def drain_instance(self, w: Worker, *, migrate: bool = True,
+                       wait: bool = True, timeout: float = 60.0) -> None:
+        """Retire a live worker without dropping in-flight work: the worker
+        is removed from the routing tables (no new descriptors), its queued
+        descriptors are migrated to data-parallel siblings (combiner
+        expected-row maps move with them) or, with ``migrate=False``, drained
+        in place, and a ``SHUTDOWN`` sentinel lets the pipeline finish
+        everything already accepted before the threads exit."""
+        from repro.serving.control.stealing import migrate_descriptors
+        with self._submit_lock:
+            if self._shutdown:
+                # shutdown owns teardown: every worker drains its own queue
+                # before exiting — migrating now would re-put descriptors
+                # behind a sibling's SHUTDOWN, where they are discarded
+                return
+            inst = self._instances.get(w.model_idx, [])
+            if w not in inst:
+                return                    # already drained (idempotent)
+            if len(inst) == 1:
+                raise ValueError(
+                    f"cannot drain {w.worker_id}: sole instance of member "
+                    f"{w.model_idx} (every member must stay served)")
+            inst.remove(w)
+            self.workers.remove(w)
+            if not any(x.device_idx == w.device_idx for x in inst):
+                self.alloc.A[w.device_idx, w.model_idx] = 0
+            if migrate:
+                migrate_descriptors(self, w, inst)
+        w.input_queue.put(SHUTDOWN)       # queued work (if any) drains first
+        if wait:
+            w.join(timeout)
+
+    def set_profiler(self, profiler) -> None:
+        """Attach a live-bench sink (``observe``/``note_request``); workers
+        report per-batch latency and the broadcaster reports per-member
+        demand to it (DESIGN.md §8)."""
+        with self._submit_lock:
+            self._profiler = profiler
+            for w in self.workers:
+                w.profiler = profiler
+
+    def instances(self, m: int) -> List[Worker]:
+        """Snapshot of member ``m``'s live data-parallel instances."""
+        with self._submit_lock:
+            return list(self._instances[m])
 
     # ---- per-request input buffers (versioned swap) --------------------------
     def _take_buffer(self, n: int, width: int) -> np.ndarray:
@@ -138,8 +242,14 @@ class InferenceSystem:
         return np.zeros((max(n, self.segment_size), width), np.int32)
 
     def _on_request_complete(self, handle: RequestHandle) -> None:
-        for c in self.combiners.values():
-            c.finish(handle.req.rid)
+        # under the topology lock: spawn_instance may add combiners
+        # concurrently, and a steal's unexpect/expect_one pair (which holds
+        # this lock) must not interleave with the teardown — finish() racing
+        # between the two would let expect_one resurrect state for a dead
+        # request that nothing ever cleans up again
+        with self._submit_lock:
+            for c in self.combiners.values():
+                c.finish(handle.req.rid)
         with self._pool_lock:
             # a cancelled/expired request's buffer may still be read by a
             # batcher that hasn't popped its descriptors yet — never hand it
@@ -172,6 +282,12 @@ class InferenceSystem:
         combine = opts.combine or self.combine
         if combine not in _COMBINE_RULES:
             raise ValueError(f"unknown combine rule {combine!r}")
+        if n == 0 or not members:
+            # zero-work request: resolve immediately instead of taking an
+            # in-flight slot and completing synchronously inside _submit —
+            # begin()'s remaining==0 fast path would fire on_complete while
+            # the submit lock is held (self-deadlock on the topology lock)
+            return self._resolved_handle(X, n, members, combine)
         deadline = opts.deadline_at()     # fixed at admission
         remaining = None if deadline is None \
             else deadline - time.perf_counter()
@@ -180,8 +296,9 @@ class InferenceSystem:
         if remaining is not None and (
                 remaining <= 0 or
                 not self._inflight.acquire(timeout=remaining)):
-            return self._failed_handle(X, members, combine, DeadlineExceeded(
-                "deadline expired at admission"))
+            return self._resolved_handle(X, 0, members, combine,
+                                         DeadlineExceeded(
+                                             "deadline expired at admission"))
         if remaining is None:
             self._inflight.acquire()
         try:
@@ -190,13 +307,15 @@ class InferenceSystem:
             self._inflight.release()      # a failed submit must not leak a slot
             raise
 
-    def _failed_handle(self, X, members, combine,
-                       error: BaseException) -> RequestHandle:
-        """A resolved-with-error handle that never entered the pipeline.
-        Built with n=0 so no (n, num_classes) result matrix is allocated
-        just to raise — this is the fail-fast path."""
-        req = Request(-1, X, 0, self.num_classes, self.segment_size,
-                      members, {}, combine)
+    def _resolved_handle(self, X, n: int, members, combine,
+                         error: Optional[BaseException] = None
+                         ) -> RequestHandle:
+        """A pre-resolved handle that never entered the pipeline: the
+        fail-fast path (``error`` set, built with n=0 so no result matrix
+        is allocated just to raise) and the zero-work path (no rows or no
+        members — ``Y`` stays the (n, classes) zero matrix)."""
+        req = Request(-1, X, n, self.num_classes, self.segment_size,
+                      list(members), {}, combine)
         handle = RequestHandle(req)
         handle.error = error
         handle._finished = True
@@ -207,6 +326,14 @@ class InferenceSystem:
                 members: List[int], combine: str, opts: PredictOptions,
                 deadline: Optional[float]) -> RequestHandle:
         with self._submit_lock:
+            if self._shutdown:
+                # the unsynchronized predict_async check can race shutdown()
+                # while we block on the in-flight window; descriptors
+                # enqueued now would land behind SHUTDOWN and be discarded
+                # (the handle would hang until the client timeout)
+                raise RuntimeError("system is shut down")
+            if self._profiler is not None:    # live per-member demand (§8)
+                self._profiler.note_request(members, n)
             rid = self._next_rid
             self._next_rid += 1
             buf = self._take_buffer(n, width)
@@ -276,12 +403,39 @@ class InferenceSystem:
         dt = time.perf_counter() - t0
         return Y, repeats * X.shape[0] / dt
 
-    def quiesce(self) -> None:
+    def quiesce(self, wait: bool = False, timeout: float = 30.0) -> bool:
         """Force every worker's batcher to flush its partially-filled
         coalesced batch immediately instead of lingering ``max_wait_us`` —
-        useful before latency-sensitive waits or a drain."""
-        for w in self.workers:
-            w.input_queue.put(FLUSH)
+        useful before latency-sensitive waits or a drain.
+
+        Re-entrant: quiesce is a *flush*, not a teardown — ``predict_async``
+        stays legal afterwards and further quiesce/submit cycles may repeat
+        (the drain/restart loop the reconfiguration controller relies on,
+        DESIGN.md §8).  With ``wait=True`` the call blocks until every live
+        batcher has processed its flush (a :class:`FlushBarrier` per worker)
+        and returns whether all barriers were reached within ``timeout``.
+        Sentinels are enqueued under the topology lock: a concurrent
+        ``drain_instance`` removes its worker under the same lock *before*
+        sending ``SHUTDOWN``, so a barrier is only ever queued ahead of a
+        worker's SHUTDOWN (and the batcher's shutdown path releases any
+        barrier that still slipped behind it) — quiesce cannot stall on a
+        retiring worker."""
+        with self._submit_lock:
+            if self._shutdown:            # nothing left to flush; a barrier
+                return True               # would stall on dead batchers
+            workers = list(self.workers)
+            if not wait:
+                for w in workers:
+                    w.input_queue.put(FLUSH)
+                return True
+            barriers = []
+            for w in workers:
+                b = FlushBarrier()
+                w.input_queue.put(b)
+                barriers.append(b)
+        deadline = time.perf_counter() + timeout
+        return all(b.done.wait(max(0.0, deadline - time.perf_counter()))
+                   for b in barriers)
 
     def stage_timings(self) -> Dict[str, Dict[str, float]]:
         """Per-stage wall-clock counters (batcher wait / fill / predict /
@@ -301,12 +455,19 @@ class InferenceSystem:
         return self.timers.gauge_snapshot()
 
     def shutdown(self):
-        if self._shutdown:
-            return
-        self._shutdown = True
-        for w in self.workers:
+        with self._submit_lock:
+            # flag + snapshot under the topology lock: a concurrent
+            # quiesce(wait=True) either sees _shutdown (and skips) or its
+            # barriers land ahead of our SHUTDOWNs and get acknowledged
+            if self._shutdown:
+                return
+            self._shutdown = True
+            workers = list(self.workers)
+        if self.controller is not None:
+            self.controller.stop()
+        for w in workers:
             w.input_queue.put(SHUTDOWN)
-        for w in self.workers:
+        for w in workers:
             w.join()
         self.accumulator.stop()
 

@@ -76,7 +76,8 @@ from repro.core.devices import DeviceSpec
 from repro.kernels.ops import pow2_clamp
 from repro.serving import segments as seg
 from repro.serving.metrics import StageTimers
-from repro.serving.segments import FLUSH, Message, Request, SHUTDOWN, Span
+from repro.serving.segments import (FLUSH, FlushBarrier, Message, Request,
+                                    SHUTDOWN, Span)
 
 MIN_BUCKET = 8
 RING_SLOTS = 4          # in-flight slot bound per worker
@@ -130,15 +131,25 @@ class Worker:
                  use_kernel: bool = False, combiner=None,
                  timers: Optional[StageTimers] = None,
                  coalesce: bool = True, max_wait_us: int = 500,
-                 linger: str = "fixed"):
+                 linger: str = "fixed", generation: int = 0,
+                 profiler=None, oom_sentinel: bool = True,
+                 fake_delay_us: int = 0):
         self.worker_id = worker_id
         self.cfg = cfg
         self.batch_size = batch_size
         self.model_idx = model_idx
+        self.generation = generation     # reconfig epoch that spawned us (§8)
+        self.profiler = profiler         # optional LiveBench sink
+        self.device_idx: Optional[int] = None   # set by InferenceSystem
         self.input_queue = input_queue
         self.prediction_queue = prediction_queue
         self.segment_size = segment_size
         self.fake = fake
+        # simulated per-compiled-batch device time for fake workers: lets
+        # scheduler benchmarks/tests model heterogeneous service rates
+        # deterministically (the sleep releases the GIL, so cross-worker
+        # parallelism is real even on a small host)
+        self.fake_delay_us = fake_delay_us
         self.device = device
         self.combiner = combiner
         self.timers = timers or StageTimers()
@@ -187,8 +198,12 @@ class Worker:
                 np.asarray(self.predict_fn(self.params, warm, self.frontend))
             self.prediction_queue.put(Message(seg.READY, model_idx, None))
         except (MemoryError, RuntimeError, ValueError):
-            # paper §II.C.2: {-1, None, None} triggers system shutdown
-            self.prediction_queue.put(Message(seg.OOM, None, None))
+            # paper §II.C.2: {-1, None, None} triggers system shutdown.  A
+            # controller-initiated speculative spawn passes oom_sentinel=False
+            # so a failed probe rejects ONE reconfig action instead of
+            # failing every in-flight request (DESIGN.md §8).
+            if oom_sentinel:
+                self.prediction_queue.put(Message(seg.OOM, None, None))
             raise
 
     # ---- threads -------------------------------------------------------------
@@ -294,12 +309,25 @@ class Worker:
             if item == SHUTDOWN:
                 if open_batch is not None:
                     self._flush(open_batch)
+                # a quiesce(wait=True) racing a drain may have enqueued its
+                # FlushBarrier behind this SHUTDOWN — release those waiters
+                # instead of leaving them to time out (descriptors cannot
+                # land here: routing was removed before the SHUTDOWN)
+                while True:
+                    try:
+                        tail = self.input_queue.get_nowait()
+                    except queue.Empty:
+                        break
+                    if isinstance(tail, FlushBarrier):
+                        tail.done.set()
                 self._batch_q.put(None)
                 return
-            if item == FLUSH:                 # quiesce: close the open slot
-                if open_batch is not None:
+            if item == FLUSH or isinstance(item, FlushBarrier):
+                if open_batch is not None:    # quiesce: close the open slot
                     self._flush(open_batch)
                     open_batch = None
+                if isinstance(item, FlushBarrier):
+                    item.done.set()           # quiesce(wait=True) barrier
                 continue
             req, s = item                     # type: Request, int
             if req.dropped():
@@ -333,6 +361,15 @@ class Worker:
                 if f == self._span:
                     self._flush(open_batch)   # full slot: flush immediately
                     open_batch = None
+            if open_batch is not None and req.deadline is not None:
+                # deadline-aware linger (ROADMAP item f): the slot may wait
+                # at most half the tightest packed row's remaining deadline
+                # budget — a tight-deadline row never waits out a full
+                # linger, and the other half of the budget is left for
+                # predict + combine.  Same perf_counter clock as the linger.
+                open_batch.deadline = min(
+                    open_batch.deadline,
+                    (time.perf_counter() + req.deadline) / 2.0)
             if open_batch is not None and req.priority == seg.PRIORITY_HIGH:
                 # high-priority rows preempt the linger: flush as soon as
                 # the queue runs dry instead of waiting out max_wait_us
@@ -353,6 +390,8 @@ class Worker:
             slot, buf, chunks, spans = item
             t0 = time.perf_counter()
             outs = None
+            if self.fake and self.fake_delay_us:
+                time.sleep(self.fake_delay_us * 1e-6 * len(chunks))
             if not self.fake:
                 outs = []
                 for off, bucket, valid in chunks:
@@ -365,7 +404,7 @@ class Worker:
                           if self.frontend is not None else None)
                     y = self.predict_fn(self.params, x, fe)
                     outs.append(y)             # async dispatch: no block here
-            self._send_q.put((slot, buf, spans, outs))
+            self._send_q.put((slot, buf, spans, outs, chunks, t0))
             self.timers.timed("predict", t0)
 
     # ---- stage 3: sender -----------------------------------------------------
@@ -383,7 +422,7 @@ class Worker:
             item = self._send_q.get()
             if item is None:
                 return
-            slot, buf, spans, outs = item
+            slot, buf, spans, outs, chunks, t_dispatch = item
             t0 = time.perf_counter()
             if outs is not None:
                 if on_device:
@@ -392,7 +431,17 @@ class Worker:
                 else:
                     outs = [np.asarray(y) for y in outs]   # d->h sync
             self._recycle(slot, buf)           # ring slot safe to reuse now
-            self.timers.timed("transfer", t0)
+            now = self.timers.timed("transfer", t0)
+            if self.profiler is not None and (outs is not None
+                                              or self.fake_delay_us):
+                # live bench feed (DESIGN.md §8): dispatch-to-materialized
+                # wall time for this slot, attributed to its chunks
+                # proportionally by dispatched rows
+                dt = now - t_dispatch
+                total = sum(c[1] for c in chunks) or 1
+                for _, bucket, valid in chunks:
+                    self.profiler.observe(self.model_idx, self.device.key(),
+                                          bucket, valid, dt * bucket / total)
             for sp in spans:
                 lo, hi = sp.req.bounds(sp.s)
                 key = (sp.req.rid, sp.s)
