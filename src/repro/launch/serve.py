@@ -30,6 +30,11 @@ def main(argv=None):
                          "queue depth (DESIGN.md §7)")
     ap.add_argument("--max-wait-us", type=int, default=500,
                     help="coalescing linger bound per open batch slot")
+    ap.add_argument("--dispatch-ahead", type=int, default=0,
+                    help="committed (non-preemptible) chunk window per "
+                         "worker: small (1-2) favors high-priority latency, "
+                         "large favors throughput; 0 = library default "
+                         "(DESIGN.md §3)")
     ap.add_argument("--cache-capacity", type=int, default=0,
                     help="rows in the prediction cache (0 disables)")
     ap.add_argument("--reconfig", action="store_true",
@@ -93,7 +98,8 @@ def main(argv=None):
                              segment_size=args.segment_size,
                              max_seq=args.seq, combine=args.combine,
                              max_wait_us=args.max_wait_us,
-                             linger=args.linger)
+                             linger=args.linger,
+                             dispatch_ahead=args.dispatch_ahead or None)
     controller = None
     if args.reconfig:
         from repro.serving.control import ReconfigController

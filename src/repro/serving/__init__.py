@@ -2,15 +2,16 @@
 worker pool, prediction accumulator, the EnsembleClient request facade and
 the HTTP wrapper."""
 from repro.serving.accumulator import PredictionAccumulator, RequestHandle
-from repro.serving.admission import AdmissionQueue
+from repro.serving.admission import AdmissionQueue, DispatchQueue, chunk_level
 from repro.serving.client import ClientHandle, EnsembleClient
 from repro.serving.combiner import DeviceCombiner
 from repro.serving.metrics import StageTimers
 from repro.serving.request_cache import PredictionCache
 from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, PRIORITY_HIGH,
-                                    PRIORITY_NORMAL, DeadlineExceeded,
-                                    Message, PredictOptions, Request,
-                                    RequestCancelled)
+                                    PRIORITY_NORMAL, ChunkDesc,
+                                    DeadlineExceeded, Message,
+                                    PredictOptions, Request,
+                                    RequestCancelled, SlotRef)
 from repro.serving.server import AdaptiveBatcher, serve
 from repro.serving.system import InferenceSystem
 from repro.serving.worker import Worker, bucket_for, make_predict_fn
@@ -20,6 +21,7 @@ __all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
            "Message", "Request", "RequestHandle", "PredictionAccumulator",
            "DeviceCombiner", "StageTimers", "AdaptiveBatcher", "serve",
            "DEFAULT_SEGMENT_SIZE", "PredictOptions", "EnsembleClient",
-           "ClientHandle", "AdmissionQueue", "PredictionCache",
+           "ClientHandle", "AdmissionQueue", "DispatchQueue", "chunk_level",
+           "ChunkDesc", "SlotRef", "PredictionCache",
            "DeadlineExceeded", "RequestCancelled", "PRIORITY_HIGH",
            "PRIORITY_NORMAL", "LiveBench", "ReconfigController"]

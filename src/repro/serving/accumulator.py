@@ -17,7 +17,12 @@ several messages (each tagged with ``row_lo``), so completion accounting
 counts **rows, not messages**: a request owes ``n × len(members)``
 member-rows, a per-member message debits ``len(P)`` rows, and a device
 partial debits ``count × segment_rows``.  The total is invariant to how the
-batcher packed the spans.
+batcher packed the spans.  Early-forward audit (chunk-granular pipeline,
+DESIGN.md §3): because nothing here assumes slot order — segments may
+complete in any order, rows in any split — a sender forwarding a segment
+the moment its last chunk returns (before its slot retires, possibly out
+of segment order under priority reordering) needs no changes on this side;
+the same row arithmetic closes.
 
 Every message carries a request id, so any number of requests can be in
 flight; each ``begin()`` returns a :class:`RequestHandle` the caller waits
@@ -158,6 +163,11 @@ class PredictionAccumulator:
             if error is not None:
                 handle.error = error
             self._requests.pop(handle.req.rid, None)
+        if error is None and handle.req.t_submit is not None:
+            # per-class end-to-end latency (the hp_p50 SLO view, §7)
+            self.timers.latency(
+                "high" if handle.req.priority == seg.PRIORITY_HIGH
+                else "normal", time.perf_counter() - handle.req.t_submit)
         handle.done.set()
         if self.on_complete is not None:
             self.on_complete(handle)

@@ -1,27 +1,53 @@
-"""Two-level priority admission queue (DESIGN.md §7, ROADMAP item a).
+"""Two-level priority queues for the worker pipeline (DESIGN.md §§3/7).
 
-The worker batcher's input queue: latency-sensitive requests must not wait
-behind a bulk scan, so admission is class-based instead of strict FIFO —
-``PRIORITY_HIGH`` descriptors drain before ``PRIORITY_NORMAL`` ones, FIFO
-*within* each class (no reordering among equals, so the sender's in-order
-span-reassembly assumption still holds per (request, segment): all of one
-segment's spans are packed in one batcher iteration either way).
+:class:`AdmissionQueue` (ROADMAP item a) is the worker batcher's input
+queue: latency-sensitive requests must not wait behind a bulk scan, so
+admission is class-based instead of strict FIFO — ``PRIORITY_HIGH``
+descriptors drain before ``PRIORITY_NORMAL`` ones, FIFO *within* each class
+(no reordering among equals, so the sender's row-count span reassembly
+stays trivially correct: all of one segment's spans are packed in one
+batcher iteration either way).
 
-The interface mirrors the ``queue.Queue`` subset the batcher uses
+:class:`DispatchQueue` (ROADMAP items e/k) sits *between the batcher and
+the predictor*: a flushed slot's compiled chunks enter it as independently
+schedulable :class:`~repro.serving.segments.ChunkDesc` units, classed by
+:func:`chunk_level`, so a high-priority chunk jumps queued bulk chunks
+instead of waiting for up to ``RING_SLOTS`` already-flushed slots.  Only
+the single chunk already dispatched to the device (plus the dispatch-ahead
+window) is non-preemptible.
+
+The interface mirrors the ``queue.Queue`` subset the consumers use
 (``put`` / ``get(timeout)`` / ``get_nowait`` / ``qsize``) so control
-sentinels (``SHUTDOWN`` / ``FLUSH``) flow through unchanged at normal
-priority.  Starvation is not a concern at this queue's time scale: high
-priority is meant for sparse latency-sensitive traffic, and a saturating
-high-priority flood is an admission-control problem upstream of the worker.
+sentinels (``SHUTDOWN`` / ``FLUSH`` / barriers) flow through unchanged at
+normal priority.  Starvation is not a concern at this queue's time scale:
+high priority is meant for sparse latency-sensitive traffic, and a
+saturating high-priority flood is an admission-control problem upstream of
+the worker.
 """
 from __future__ import annotations
 
+import heapq
 import queue
 import threading
 from collections import deque
-from typing import Optional
+from typing import Optional, Sequence
 
-from repro.serving.segments import PRIORITY_HIGH, PRIORITY_NORMAL
+from repro.serving.segments import (PRIORITY_HIGH, PRIORITY_NORMAL, Span,
+                                    priority_level)
+
+
+def chunk_level(spans: Sequence[Span]) -> int:
+    """Dispatch class of a chunk: the most urgent priority among the
+    requests whose spans it carries (reusing the admission
+    ``priority_level`` scale, where lower = more urgent).  A bulk chunk
+    that coalesced even one high-priority request's rows dispatches at high
+    priority — holding those rows back would defeat the preemption."""
+    level = PRIORITY_NORMAL
+    for sp in spans:
+        level = min(level, priority_level(sp.req.priority))
+        if level == PRIORITY_HIGH:
+            break
+    return level
 
 
 class AdmissionQueue:
@@ -35,6 +61,16 @@ class AdmissionQueue:
     def put(self, item, priority: int = PRIORITY_NORMAL) -> None:
         with self._not_empty:
             self._levels[priority].append(item)
+            self._not_empty.notify()
+
+    def put_many(self, items, priority: int = PRIORITY_NORMAL) -> None:
+        """Enqueue a batch of items at one level under ONE lock acquisition
+        (the batcher flushes a slot's chunks together — per-item locking
+        would multiply queue overhead by chunks-per-slot)."""
+        if not items:
+            return
+        with self._not_empty:
+            self._levels[priority].extend(items)
             self._not_empty.notify()
 
     def _pop(self):
@@ -57,6 +93,35 @@ class AdmissionQueue:
         with self._lock:
             return self._pop()
 
+    def take_high(self):
+        """Atomically pop the head HIGH-priority *descriptor*, or return
+        None when the high class is empty or its head is not a descriptor
+        tuple.  The batcher's preemptible bulk-slot wait uses this: a bare
+        depth-check-then-get would race ``drain_descriptors`` (drain-side
+        migration empties BOTH classes under the queue lock) and either
+        raise Empty or swallow a sentinel the batcher still owes an ack
+        for."""
+        with self._lock:
+            q = self._levels[PRIORITY_HIGH]
+            if q and isinstance(q[0], tuple):
+                return q.popleft()
+            return None
+
+    def get_batch(self, max_items: int):
+        """Block for the first item, then pop up to ``max_items`` under ONE
+        lock acquisition, strictly in priority order (all available high
+        items drain before any normal one).  The consumer-side twin of
+        :meth:`put_many`: per-item locking on a hot hand-off path costs a
+        contended lock round per item for no scheduling benefit when the
+        caller is about to commit the whole batch anyway."""
+        with self._not_empty:
+            while not self._size_locked():
+                self._not_empty.wait()
+            out = []
+            while len(out) < max_items and self._size_locked():
+                out.append(self._pop())
+            return out
+
     def _size_locked(self) -> int:
         return len(self._levels[PRIORITY_HIGH]) + \
             len(self._levels[PRIORITY_NORMAL])
@@ -66,24 +131,59 @@ class AdmissionQueue:
             return self._size_locked()
 
     def steal(self, max_items: int) -> list:
-        """Pop up to ``max_items`` of the NEWEST normal-priority segment
-        descriptors off the tail, preserving their relative order (DESIGN.md
-        §8: cross-worker work stealing).  Tail-stealing takes the work that
-        would otherwise wait longest and leaves the victim's head untouched,
-        so descriptors the batcher is about to drain are never contended.
-        The sweep walks tail-ward until it meets a non-descriptor item and
-        stops there: it can only take descriptors enqueued *after* the last
-        sentinel, and a queue whose tail IS a sentinel (``SHUTDOWN`` /
-        ``FLUSH`` just posted — the worker is draining or being quiesced)
-        yields nothing.  Sentinels themselves are never popped or reordered.
-        Atomic with respect to the consumer: a descriptor is owned either by
-        the thief or by the batcher, never both."""
+        """Pop up to ``max_items`` normal-priority segment descriptors from
+        the stealable tail region (DESIGN.md §8: cross-worker work
+        stealing).  The sweep walks tail-ward until it meets a
+        non-descriptor item and stops there: it can only take descriptors
+        enqueued *after* the last sentinel, and a queue whose tail IS a
+        sentinel (``SHUTDOWN`` / ``FLUSH`` just posted — the worker is
+        draining or being quiesced) yields nothing.  Sentinels themselves
+        are never popped or reordered, and the victim's head — what its
+        batcher is about to drain — is never contended.
+
+        Within the stealable region selection is **deadline-aware** (ROADMAP
+        item i): descriptors whose requests have the tightest remaining
+        deadline budget are picked first — they gain the most from the idle
+        sibling — and deadline-less descriptors rank loosest, newest first
+        (the work that would otherwise wait longest, the classic tail-steal
+        order).  The returned list drains tightest-deadline work first
+        (FIFO among equals), so re-putting at the destination serves urgent
+        work soonest.  Atomic with respect to the consumer: a descriptor is
+        owned either by the thief or by the batcher, never both."""
         with self._lock:
             q = self._levels[PRIORITY_NORMAL]
-            stolen = []
-            while q and len(stolen) < max_items and isinstance(q[-1], tuple):
-                stolen.append(q.pop())
-        stolen.reverse()
+            first = len(q)
+            any_deadline = False
+            while first > 0 and isinstance(q[first - 1], tuple):
+                first -= 1
+                if getattr(q[first][0], "deadline", None) is not None:
+                    any_deadline = True
+            if first == len(q):
+                return []
+            if not any_deadline:
+                # common case (bulk work carries no deadlines): the classic
+                # O(max_items) tail pop — no sort, no region rebuild, and
+                # the victim's batcher contends this lock on its hot path
+                stolen = []
+                while q and len(stolen) < max_items and \
+                        isinstance(q[-1], tuple):
+                    stolen.append(q.pop())
+                stolen.reverse()
+                return stolen
+
+            def urgency(i):          # (no-deadline flag, deadline) ascending
+                d = getattr(q[i][0], "deadline", None)
+                return (d is None, d or 0.0)
+
+            chosen = heapq.nsmallest(max_items, range(first, len(q)),
+                                     key=lambda i: urgency(i) + (-i,))
+            chosen.sort(key=lambda i: urgency(i) + (i,))
+            stolen = [q[i] for i in chosen]
+            take = set(chosen)
+            kept = [q[i] for i in range(first, len(q)) if i not in take]
+            for _ in range(len(q) - first):
+                q.pop()
+            q.extend(kept)
         return stolen
 
     def drain_descriptors(self) -> list:
@@ -110,3 +210,23 @@ class AdmissionQueue:
         ``qsize``; per-class depth feeds tests and adaptive linger)."""
         with self._lock:
             return len(self._levels[priority])
+
+
+class DispatchQueue(AdmissionQueue):
+    """The per-worker chunk dispatch queue between batcher and predictor
+    (DESIGN.md §3): items are :class:`~repro.serving.segments.ChunkDesc`
+    units ``put`` at their :func:`chunk_level` class — high-priority chunks
+    jump queued bulk chunks, FIFO within a class — plus pipeline control
+    items at normal priority (``None`` shutdown sentinel, ``FlushBarrier``
+    acknowledged by the predictor once every previously-flushed chunk has
+    been dispatched).  Chunks are never stolen or migrated: their rows are
+    already packed into this worker's ring slots, so re-routing happens one
+    stage earlier, on the :class:`AdmissionQueue`."""
+
+    def steal(self, max_items: int) -> list:
+        raise TypeError("chunks are bound to their worker's ring slots; "
+                        "steal from the AdmissionQueue instead")
+
+    def drain_descriptors(self) -> list:
+        raise TypeError("chunks are bound to their worker's ring slots; "
+                        "migrate AdmissionQueue descriptors instead")

@@ -249,6 +249,7 @@ class EnsembleClient:
             ctl = self.system.controller
             return {"counters": self.system.serving_counters(),
                     "gauges": self.system.serving_gauges(),
+                    "latency": self.system.latency_snapshot(),
                     "stages": self.system.stage_timings(),
                     "cache": ({"hits": self.cache.hits,
                                "misses": self.cache.misses}

@@ -16,6 +16,15 @@ row-ranges — the combiner therefore counts **rows, not messages**: a segment
 flushes the moment ``members_on_device × segment_rows`` rows have been
 folded, which is reached exactly once however the spans were packed.
 
+Early-forward audit (chunk-granular pipeline, DESIGN.md §3): senders now
+forward a (request, segment) the moment its last chunk materializes —
+before the slot retires, and under priority reordering possibly *out of
+segment order* and interleaved arbitrarily across members.  The row
+arithmetic above is already order-free (each (segment, member) contributes
+its rows exactly once, whenever it arrives), so nothing here changes; the
+same holds for the `unexpect`/`expect_one` steal migration, which operates
+on counts, not arrival order.
+
 Combination rules are applied member-side, so the partial is always additive:
   mean/weighted  partial[lo:hi] += w_m · P_m[lo:hi]
   vote           partial[lo:hi] += w_vote · onehot(argmax P_m[lo:hi])

@@ -7,9 +7,10 @@ re-routed to the sibling.  Three invariants make a steal safe:
 
 * **atomic ownership** — ``AdmissionQueue.steal`` pops descriptors under the
   queue lock, so a descriptor is processed by exactly one batcher; a whole
-  ``(request, segment)`` moves at once, so the sender's in-order span
-  reassembly is untouched (all of a segment's spans still flow through one
-  batcher);
+  ``(request, segment)`` moves at once, so the sender's span reassembly is
+  untouched (all of a segment's spans still flow through one batcher).
+  Selection is deadline-aware (ROADMAP item i): the tightest remaining
+  deadline budget moves first — it gains the most from the idle sibling;
 * **expected-row maps move with the work** — with the device-resident
   partial combine, the source device's combiner expected one contribution
   for the stolen (request, segment); ``unexpect``/``expect_one`` transfer
@@ -89,10 +90,13 @@ def balance_member(system, m: int, *, threshold: int = 4,
     siblings are assumed equal-rate and this reduces to halving the depth
     gap.  ``threshold`` is in descriptors, measured at the *destination*'s
     service rate (how many descriptors of gap make the steal worthwhile).
-    Backlog is the normal-priority depth — high-priority descriptors are
-    never stolen, so counting them (``qsize``) would make the fast loop
-    chase phantom imbalance it can move nothing for.  Returns descriptors
-    moved.
+    Backlog is the normal-priority admission depth **plus the chunk
+    dispatch-queue backlog in segment units** (chunk-granular pipeline:
+    flushed-but-undispatched work is real drain time the admission depth
+    can no longer see, but it is not stealable — only the admission part
+    moves).  High-priority descriptors are never stolen, so counting them
+    (``qsize``) would make the fast loop chase phantom imbalance it can
+    move nothing for.  Returns descriptors moved.
 
     The fast loop runs every couple of milliseconds, so an idle system must
     not pay for it: a lock-free peek at the per-queue depths (list copy is
@@ -113,7 +117,11 @@ def balance_member(system, m: int, *, threshold: int = 4,
         if profile is not None:
             t_seg = profile.segment_time(m, w.device.key(), w.batch_size,
                                          system.segment_size)
-        rates.append((w, w.input_queue.depth(PRIORITY_NORMAL), t_seg))
+        # admission backlog + flushed-but-undispatched chunks (in segment
+        # units) — the dispatch queue is drain time too, just not stealable
+        depth = w.input_queue.depth(PRIORITY_NORMAL) + \
+            w.dispatch_backlog() / max(1, w.chunks_per_segment)
+        rates.append((w, depth, t_seg))
     if any(t is None for _, _, t in rates):
         t_by_w = {id(w): 1.0 for w, _, _ in rates}     # cold profile: equal
     else:

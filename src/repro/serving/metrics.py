@@ -3,6 +3,10 @@
 Stages (one wall-clock accumulator each, shared by all threads):
   ``batcher_wait``   time a batcher spends blocked on its input queue,
   ``batch_fill``     copying request rows into coalesced batch slots,
+  ``dispatch_wait.high`` / ``dispatch_wait.normal``
+                     per-class time a chunk waits in the priority dispatch
+                     queue between batcher and predictor (the preemption
+                     lever: high should stay near zero under bulk load),
   ``predict``        jitted-step dispatch (async — excludes device time),
   ``transfer``       device sync + device->host fetch in the sender,
   ``combine``        device-partial / accumulator fold time.
@@ -10,22 +14,31 @@ Stages (one wall-clock accumulator each, shared by all threads):
 Counters (monotonic sums) instrument the coalescing scheduler:
   ``rows_valid``       request rows dispatched to the device,
   ``rows_dispatched``  rows actually sent including bucket padding,
+  ``rows_dropped``     rows of cancelled/expired requests dropped before
+                       (or instead of) device time,
   ``batches``          compiled-batch dispatches,
   ``spans``            (request, segment, row-range) spans packed into
                        batches — spans/batches is the coalescing factor.
 
 Gauges record last/max/mean of a sampled value (e.g.
 ``queue_depth.<worker_id>``, that batcher's input-queue backlog at each
-drain).
+drain; ``hp_p50_ms``, the rolling high-priority median request latency).
+
+Latency reservoirs keep the most recent ``LATENCY_WINDOW`` end-to-end
+request latencies per priority class; ``latency_snapshot()`` turns them
+into p50/p99 — the SLO view `/metrics` exports (``hp_p50`` etc.).
 
 float += under the GIL is atomic enough for counters; a lock would cost more
 than the statistic is worth, so snapshots are only approximately consistent.
 """
 from __future__ import annotations
 
+import threading
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Dict, List
+
+LATENCY_WINDOW = 512      # recent completions kept per priority class
 
 
 class StageTimers:
@@ -34,6 +47,12 @@ class StageTimers:
         self.count: Dict[str, int] = defaultdict(int)
         self.counters: Dict[str, float] = defaultdict(float)
         self._gauges: Dict[str, List[float]] = {}   # name -> [last,max,sum,n]
+        # latency reservoirs get a real lock (unlike the counters): the
+        # snapshot ITERATES the deques/dict, and CPython raises if another
+        # thread appends mid-iteration — recording is per-request (not
+        # per-chunk), so the lock is off the hot path
+        self._latency: Dict[str, "deque[float]"] = {}   # class -> recent s
+        self._lat_lock = threading.Lock()
 
     def add(self, stage: str, dt: float) -> None:
         self.total_s[stage] += dt
@@ -59,6 +78,36 @@ class StageTimers:
             g[2] += v
             g[3] += 1
 
+    # ---- per-class request latency (SLO view, DESIGN.md §7) ------------------
+    def latency(self, cls: str, dt: float) -> None:
+        """Record one completed request's end-to-end latency under priority
+        class ``cls`` ("high"/"normal").  High-priority completions also
+        refresh the ``hp_p50_ms`` gauge, so the rolling median is visible
+        wherever gauges are (high traffic is sparse by design — the sort is
+        bounded by LATENCY_WINDOW and off the bulk path)."""
+        with self._lat_lock:
+            d = self._latency.get(cls)
+            if d is None:
+                d = self._latency[cls] = deque(maxlen=LATENCY_WINDOW)
+            d.append(dt)
+            if cls == "high":
+                self.gauge("hp_p50_ms", 1e3 * sorted(d)[(len(d) - 1) // 2])
+
+    def latency_snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Per-class {p50_ms, p99_ms, n} over the rolling window."""
+        out = {}
+        with self._lat_lock:
+            classes = {cls: list(d) for cls, d in self._latency.items()}
+        for cls, vals in sorted(classes.items()):
+            arr = sorted(vals)
+            n = len(arr)
+            if not n:
+                continue
+            out[cls] = {"n": n,
+                        "p50_ms": 1e3 * arr[(n - 1) // 2],
+                        "p99_ms": 1e3 * arr[min(n - 1, int(0.99 * n))]}
+        return out
+
     def padding_efficiency(self) -> float:
         """Valid rows / dispatched rows (1.0 = no padding waste)."""
         dispatched = self.counters.get("rows_dispatched", 0.0)
@@ -71,6 +120,8 @@ class StageTimers:
         self.count.clear()
         self.counters.clear()
         self._gauges.clear()
+        with self._lat_lock:
+            self._latency.clear()
 
     def snapshot(self) -> Dict[str, Dict[str, float]]:
         return {stage: {"total_s": self.total_s[stage],

@@ -31,6 +31,15 @@ cache policy, streaming — and rides on the :class:`Request`, so every stage
 that pops a descriptor whose request is cancelled or past its deadline posts
 ``Message(DROPPED, ...)`` instead of packing rows; the accumulator turns that
 into a :class:`DeadlineExceeded` / :class:`RequestCancelled` result.
+
+Chunk granularity (DESIGN.md §3): a flushed slot is no longer indivisible —
+the batcher cuts it into its compiled chunks and each becomes a
+:class:`ChunkDesc`, the unit the per-worker dispatch queue schedules (a
+high-priority chunk jumps queued bulk chunks).  A :class:`SlotRef` carries
+the slot's outstanding-chunk refcount: the ring buffer recycles only after
+EVERY chunk's output is materialized (on CPU ``device_put`` may alias host
+memory, so one chunk retiring early must not free rows another chunk still
+reads).
 """
 from __future__ import annotations
 
@@ -195,6 +204,7 @@ class Request:
     combine: str = "mean"
     priority: int = PRIORITY_NORMAL
     deadline: Optional[float] = None    # absolute perf_counter seconds
+    t_submit: Optional[float] = None    # admission time (perf_counter)
     cancel_event: threading.Event = field(default_factory=threading.Event,
                                           repr=False, compare=False)
 
@@ -226,3 +236,54 @@ class Span:
     seg_off: int                 # first row within the segment (0-based)
     batch_off: int               # first row within the batch buffer
     n: int                       # row count
+
+
+class SlotRef:
+    """Outstanding-chunk refcount for one flushed ring slot (DESIGN.md §3).
+
+    The slot's chunks dispatch (and may complete) independently, but the
+    underlying buffer is shared — on CPU ``device_put`` may alias host
+    memory, so it can recycle only after EVERY chunk's output is
+    materialized.  Each chunk calls :meth:`release` exactly once; the call
+    that drops the count to zero returns True and owns the recycle.
+
+    Deliberately lock-free: every release happens on the owning worker's
+    single sender thread (skipped chunks ride the same send queue), and the
+    batcher's construction happens-before via that queue — a lock here
+    would cost one contended acquire per chunk on the hot path."""
+    __slots__ = ("slot", "buf", "pending")
+
+    def __init__(self, slot: Optional[int], buf: np.ndarray, pending: int):
+        self.slot = slot             # ring index, or None (side-pool buffer)
+        self.buf = buf
+        self.pending = pending
+
+    def release(self) -> bool:
+        self.pending -= 1
+        return self.pending == 0
+
+
+class ChunkDesc:
+    """One compiled-batch chunk cut from a flushed slot — the independently
+    schedulable unit of the predictor pipeline (DESIGN.md §3).
+
+    Slot rows ``[off, off + bucket)`` (``valid`` of them real, the tail
+    zero-padded) form one jitted dispatch; ``spans`` is the scatter
+    descriptor restricted to this chunk (spans never cross a compiled-batch
+    boundary, so the restriction is exact).  ``level`` is the chunk's
+    dispatch class — the most urgent priority among the requests whose spans
+    it carries — and ``t_enq`` timestamps entry into the dispatch queue (the
+    per-class ``dispatch_wait`` stage timers).  A ``__slots__`` class, not a
+    dataclass: tens of thousands are created per second on the hot path."""
+    __slots__ = ("ref", "off", "bucket", "valid", "spans", "level", "t_enq")
+
+    def __init__(self, ref: SlotRef, off: int, bucket: int, valid: int,
+                 spans: List[Span], level: int = PRIORITY_NORMAL,
+                 t_enq: float = 0.0):
+        self.ref = ref               # shared slot refcount
+        self.off = off               # first slot row of this chunk
+        self.bucket = bucket         # compiled (padded) batch shape
+        self.valid = valid           # valid rows (<= bucket)
+        self.spans = spans           # scatter descriptor, this chunk only
+        self.level = level           # dispatch class
+        self.t_enq = t_enq           # dispatch-queue entry (perf_counter)

@@ -16,8 +16,10 @@ Endpoints (stdlib only):
                     coalescing scheduler already does cross-request batching
                     with per-request options honored.
   GET  /metrics     serving counters (padding efficiency, rows, batches,
-                    spans), per-worker queue-depth gauges, per-stage
-                    timings, cache hit rates (ROADMAP item d)
+                    spans), per-worker queue-depth gauges (+ the rolling
+                    hp_p50_ms gauge), per-priority-class latency p50/p99,
+                    per-stage timings incl. dispatch_wait.high/normal,
+                    cache hit rates (ROADMAP item d)
   GET  /health      -> {"status": "ok", "workers": N}
   GET  /allocation  -> the allocation matrix
 """
@@ -163,6 +165,9 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
                 self._json(200, {
                     "counters": system.serving_counters(),
                     "gauges": system.serving_gauges(),
+                    # per-class p50/p99 (incl. hp_p50 — the SLO the
+                    # chunk-granular preemption targets, DESIGN.md §3)
+                    "latency": system.latency_snapshot(),
                     "stages": system.stage_timings(),
                     "cache": ({"hits": cache.hits, "misses": cache.misses}
                               if cache is not None else None),

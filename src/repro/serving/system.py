@@ -64,7 +64,8 @@ class InferenceSystem:
                  coalesce: bool = True,
                  max_wait_us: int = 500,
                  linger: str = "fixed",
-                 fake_delay_us: int = 0):
+                 fake_delay_us: int = 0,
+                 dispatch_ahead: Optional[int] = None):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
@@ -76,6 +77,12 @@ class InferenceSystem:
         self.coalesce = coalesce
         self.max_wait_us = max_wait_us
         self.linger = linger
+        # K outstanding async dispatches per worker: the committed
+        # (non-preemptible) window — small K favors high-priority latency,
+        # large K favors pipeline throughput (DESIGN.md §3)
+        from repro.serving.worker import DISPATCH_AHEAD
+        self.dispatch_ahead = DISPATCH_AHEAD if dispatch_ahead is None \
+            else dispatch_ahead
         self.M = len(self.cfgs)
         # retained for live instance spawn/drain (DESIGN.md §8)
         self._params_list = list(params_list)
@@ -140,7 +147,8 @@ class InferenceSystem:
                    coalesce=self.coalesce, max_wait_us=self.max_wait_us,
                    linger=self.linger, generation=generation,
                    profiler=self._profiler, oom_sentinel=oom_sentinel,
-                   fake_delay_us=self._fake_delay_us)
+                   fake_delay_us=self._fake_delay_us,
+                   dispatch_ahead=self.dispatch_ahead)
         w.device_idx = d
         return w
 
@@ -340,7 +348,8 @@ class InferenceSystem:
             buf[:n] = X
             req = Request(rid, buf, n, self.num_classes, self.segment_size,
                           members, self._request_weights(members, combine),
-                          combine, priority=opts.level(), deadline=deadline)
+                          combine, priority=opts.level(), deadline=deadline,
+                          t_submit=time.perf_counter())
             handle = self.accumulator.begin(req, on_segment=opts.on_segment)
             # static striping: (s, m) -> one instance; makes per-device
             # contribution counts deterministic for the partial combine.
@@ -412,8 +421,10 @@ class InferenceSystem:
         stays legal afterwards and further quiesce/submit cycles may repeat
         (the drain/restart loop the reconfiguration controller relies on,
         DESIGN.md §8).  With ``wait=True`` the call blocks until every live
-        batcher has processed its flush (a :class:`FlushBarrier` per worker)
-        and returns whether all barriers were reached within ``timeout``.
+        batcher has processed its flush AND every chunk flushed before the
+        barrier has been dispatched (the :class:`FlushBarrier` rides the
+        chunk dispatch queue and is acknowledged by the predictor), and
+        returns whether all barriers were reached within ``timeout``.
         Sentinels are enqueued under the topology lock: a concurrent
         ``drain_instance`` removes its worker under the same lock *before*
         sending ``SHUTDOWN``, so a barrier is only ever queued ahead of a
@@ -451,8 +462,15 @@ class InferenceSystem:
 
     def serving_gauges(self) -> Dict[str, Dict[str, float]]:
         """Sampled gauges, keyed per worker (``queue_depth.<worker_id>``:
-        that batcher's input-queue backlog at each drain)."""
+        that batcher's input-queue backlog at each drain) plus the rolling
+        ``hp_p50_ms`` high-priority median latency."""
         return self.timers.gauge_snapshot()
+
+    def latency_snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Per-priority-class end-to-end request latency percentiles
+        ({"high"/"normal": {p50_ms, p99_ms, n}}) over a rolling window —
+        the SLO view the chunk-granular preemption targets (DESIGN.md §3)."""
+        return self.timers.latency_snapshot()
 
     def shutdown(self):
         with self._submit_lock:

@@ -34,19 +34,52 @@ requests/segments into full compiled batches:
   * ``coalesce=False`` restores the PR-1 one-item-at-a-time batching (each
     (request, segment) flushes its own slot) as a measurement baseline;
   * slots come from a **preallocated ring** (free-list backpressure bounds
-    in-flight memory); a slot is recycled only after the predictor's output
-    is materialized — on CPU ``device_put`` may alias host memory, so early
-    reuse would corrupt an in-flight batch.  Mismatched-seq requests
-    (request width != compiled ring width) draw buffers from a small
-    per-width side pool instead of allocating per slot;
-  * the sender reassembles each segment from its spans (all of a segment's
-    spans pass through one sender in order) and forwards ONE contribution
-    per (request, segment) — per-span forwarding would multiply
-    combiner/accumulator traffic by chunks-per-segment;
+    in-flight memory).  Mismatched-seq requests (request width != compiled
+    ring width) draw buffers from a small per-width side pool instead of
+    allocating per slot.
+
+Chunk-granular dispatch (DESIGN.md §3, ROADMAP items e/k): a flushed slot
+is no longer slot-indivisible through the predictor.  The batcher cuts it
+into its compiled chunks *at flush time* and each chunk enters a per-worker
+priority :class:`~repro.serving.admission.DispatchQueue` as an independent
+:class:`~repro.serving.segments.ChunkDesc`:
+
+  * a high-priority chunk (any span from a ``priority="high"`` request)
+    jumps every queued bulk chunk — the non-preemptible head shrinks from
+    up to ``RING_SLOTS`` flushed slots to the single chunk already
+    dispatched plus the dispatch-ahead window;
+  * high-priority packing is **express**: it never blocks on the ring free
+    list (a pooled side buffer serves when all slots are in flight with
+    bulk), and a bulk descriptor's own wait for a free slot is
+    *interruptible* — high-priority descriptors landing mid-wait are
+    admitted first;
+  * the predictor keeps up to ``dispatch_ahead`` (K) async XLA dispatches
+    outstanding — the device never starves while the queue reorders, and K
+    bounds the committed (non-preemptible) work ahead of a late-arriving
+    high-priority chunk;
+  * a chunk whose every span belongs to a cancelled/expired request is
+    dropped at dequeue time (never dispatched): the predictor posts the
+    ``DROPPED`` resolution and the rows land on the ``rows_dropped``
+    counter instead of occupying device time;
+  * slot recycling moves to a per-slot outstanding-chunk **refcount**
+    (:class:`~repro.serving.segments.SlotRef`): the ring buffer recycles
+    only after every chunk's output is materialized — on CPU ``device_put``
+    may alias host memory, so one chunk retiring early must not free rows
+    another chunk still reads;
+  * the sender forwards a (request, segment) contribution **as soon as its
+    last span's chunk returns** (early per-segment forwarding) rather than
+    when the whole slot retires; spans may now materialize out of order
+    within a segment (a mixed chunk rides the high-priority class while its
+    bulk siblings queue), so reassembly is row-count-based with parts keyed
+    by segment offset.  Still ONE contribution per (request, segment) —
+    per-span forwarding would multiply combiner/accumulator traffic by
+    chunks-per-segment;
   * per-stage wall-clock counters (metrics.StageTimers) instrument the
-    batcher wait, batch fill, predict dispatch, and device sync/transfer;
-    padding counters (``rows_valid`` / ``rows_dispatched``) and the
-    ``queue_depth`` gauge expose coalescing efficiency.
+    batcher wait, batch fill, per-class dispatch-queue wait
+    (``dispatch_wait.high`` / ``dispatch_wait.normal``), predict dispatch,
+    and device sync/transfer; padding counters (``rows_valid`` /
+    ``rows_dispatched``) and the ``queue_depth`` gauge expose coalescing
+    efficiency.
 
 Request-API admission (DESIGN.md §7): the input queue is a two-level
 :class:`~repro.serving.admission.AdmissionQueue` — high-priority descriptors
@@ -75,14 +108,19 @@ from repro.configs.base import ModelConfig
 from repro.core.devices import DeviceSpec
 from repro.kernels.ops import pow2_clamp
 from repro.serving import segments as seg
+from repro.serving.admission import DispatchQueue, chunk_level
 from repro.serving.metrics import StageTimers
-from repro.serving.segments import (FLUSH, FlushBarrier, Message, Request,
-                                    SHUTDOWN, Span)
+from repro.serving.segments import (FLUSH, ChunkDesc, FlushBarrier, Message,
+                                    Request, SHUTDOWN, SlotRef, Span)
 
 MIN_BUCKET = 8
 RING_SLOTS = 4          # in-flight slot bound per worker
 ALT_POOL_CAP = 4        # pooled mismatched-seq buffers per width
 ADAPTIVE_DEPTH = 8      # linger="adaptive": backlog at which linger hits 0
+DISPATCH_AHEAD = 16     # default outstanding async XLA dispatches (K):
+                        # throughput-friendly — K bounds the committed
+                        # (non-preemptible) window, so latency-sensitive
+                        # mixed-traffic deployments set it small (1-2)
 
 
 def bucket_for(n: int, batch_size: int) -> int:
@@ -133,7 +171,8 @@ class Worker:
                  coalesce: bool = True, max_wait_us: int = 500,
                  linger: str = "fixed", generation: int = 0,
                  profiler=None, oom_sentinel: bool = True,
-                 fake_delay_us: int = 0):
+                 fake_delay_us: int = 0,
+                 dispatch_ahead: int = DISPATCH_AHEAD):
         self.worker_id = worker_id
         self.cfg = cfg
         self.batch_size = batch_size
@@ -161,8 +200,17 @@ class Worker:
         self.linger_mode = linger
         self._depth_gauge = f"queue_depth.{worker_id}"
         self.num_classes = cfg.vocab_size
-        self._batch_q: "queue.Queue" = queue.Queue(maxsize=4)
-        self._send_q: "queue.Queue" = queue.Queue(maxsize=8)
+        # chunk-granular dispatch: priority queue batcher -> predictor, plus
+        # the dispatch-ahead window (K outstanding async XLA dispatches —
+        # the semaphore is acquired before a chunk is *committed*, so the
+        # queue may reorder right up to the moment of dispatch)
+        self.dispatch_ahead = max(1, dispatch_ahead)
+        self._dispatch_q = DispatchQueue()
+        self._dispatch_sem = threading.BoundedSemaphore(self.dispatch_ahead)
+        # SimpleQueue (C implementation): per-chunk hand-offs are hot, and
+        # depth is already bounded by the dispatch-ahead window (the sem is
+        # only released once the sender materializes a chunk)
+        self._send_q: "queue.SimpleQueue" = queue.SimpleQueue()
         self._threads: List[threading.Thread] = []
         self._jax_device = device.jax_devices[0] if device.jax_devices else None
 
@@ -242,17 +290,43 @@ class Worker:
             return self.linger_s * max(0.0, 1.0 - depth / ADAPTIVE_DEPTH)
         return self.linger_s
 
-    def _open_batch(self, width: int) -> _OpenBatch:
+    def _side_buffer(self, width: int) -> np.ndarray:
+        with self._alt_lock:
+            pool = self._alt_pool.setdefault(width, [])
+            buf = pool.pop() if pool else None
+        return buf if buf is not None else \
+            np.zeros((self._span, width), np.int32)
+
+    def _open_batch(self, width: int,
+                    express: bool = False) -> Optional[_OpenBatch]:
+        """Open a fresh slot.  ``express`` (high-priority packing) never
+        blocks: it takes a free ring slot if one is instantly available and
+        otherwise draws a pooled side buffer — a latency-sensitive request
+        must not wait for ``RING_SLOTS`` bulk slots to materialize.  The
+        bulk path blocks on the free list (backpressure), but the wait is
+        *interruptible*: it returns None the moment high-priority work
+        lands in the admission queue, so the batcher can service it first
+        (the preemptible-pipeline lever, ROADMAP items e/k)."""
+        slot = buf = None
         if width == self._ring[0].shape[1]:
-            slot = self._free_slots.get()
-            buf = self._ring[slot]
-        else:                  # rare: request seq != compiled ring seq
+            if express:
+                try:
+                    slot = self._free_slots.get_nowait()
+                except queue.Empty:
+                    slot = None
+            else:
+                while True:
+                    try:
+                        slot = self._free_slots.get(timeout=0.002)
+                        break
+                    except queue.Empty:
+                        if self.input_queue.depth(seg.PRIORITY_HIGH):
+                            return None       # high work first; retry after
+            if slot is not None:
+                buf = self._ring[slot]
+        if buf is None:        # side pool: mismatched seq or express overflow
             slot = None
-            with self._alt_lock:
-                pool = self._alt_pool.setdefault(width, [])
-                buf = pool.pop() if pool else None
-            if buf is None:
-                buf = np.zeros((self._span, width), np.int32)
+            buf = self._side_buffer(width)
         return _OpenBatch(slot, buf, width,
                           time.perf_counter() + self._effective_linger())
 
@@ -265,11 +339,25 @@ class Worker:
             if len(pool) < ALT_POOL_CAP:
                 pool.append(buf)
 
+    # ---- backlog accounting (work stealing, DESIGN.md §8) --------------------
+    @property
+    def chunks_per_segment(self) -> int:
+        """Compiled chunks per full segment (drain-time unit conversion)."""
+        return self._span // self.batch_size
+
+    def dispatch_backlog(self) -> int:
+        """Chunks flushed but not yet committed to the device — the stage
+        the admission-queue depth can no longer see (steal accounting)."""
+        return self._dispatch_q.qsize()
+
     # ---- stage 1: batcher ----------------------------------------------------
     def _flush(self, batch: _OpenBatch) -> None:
         """Close a slot: cut it into compiled-batch chunks (full batches plus
-        a pow2-bucketed remainder), zero stale pad rows, and hand the whole
-        slot to the predictor in ONE queue hop.  Padding counters make
+        a pow2-bucketed remainder), zero stale pad rows, and enqueue each
+        chunk as an independently schedulable :class:`ChunkDesc` on the
+        priority dispatch queue.  The slot's :class:`SlotRef` refcount
+        starts at the chunk count, so the ring buffer recycles only after
+        every chunk's output is materialized.  Padding counters make
         coalescing efficiency observable."""
         chunks = []                           # (offset, bucket, valid) views
         for off in range(0, batch.fill, self.batch_size):
@@ -282,7 +370,23 @@ class Worker:
             self.timers.inc("rows_dispatched", bucket)
         self.timers.inc("batches", len(chunks))
         self.timers.inc("spans", len(batch.spans))
-        self._batch_q.put((batch.slot, batch.buf, chunks, batch.spans))
+        if not chunks:                        # defensive: nothing packed
+            self._recycle(batch.slot, batch.buf)
+            return
+        ref = SlotRef(batch.slot, batch.buf, len(chunks))
+        by_chunk: Dict[int, List[Span]] = {}
+        for sp in batch.spans:                # spans are chunk-aligned
+            by_chunk.setdefault(sp.batch_off // self.batch_size,
+                                []).append(sp)
+        now = time.perf_counter()
+        by_level: Dict[int, list] = {}
+        for i, (off, bucket, valid) in enumerate(chunks):
+            spans = by_chunk.get(i, [])
+            level = chunk_level(spans)
+            by_level.setdefault(level, []).append(
+                ChunkDesc(ref, off, bucket, valid, spans, level, now))
+        for level, descs in sorted(by_level.items()):
+            self._dispatch_q.put_many(descs, level)
 
     def _batcher(self):
         open_batch: Optional[_OpenBatch] = None
@@ -320,157 +424,264 @@ class Worker:
                         break
                     if isinstance(tail, FlushBarrier):
                         tail.done.set()
-                self._batch_q.put(None)
+                self._dispatch_q.put(None)
                 return
             if item == FLUSH or isinstance(item, FlushBarrier):
                 if open_batch is not None:    # quiesce: close the open slot
                     self._flush(open_batch)
                     open_batch = None
                 if isinstance(item, FlushBarrier):
-                    item.done.set()           # quiesce(wait=True) barrier
+                    # the barrier rides the dispatch queue: the predictor
+                    # acks it only once every chunk flushed before the
+                    # quiesce has actually been dispatched (DESIGN.md §8)
+                    self._dispatch_q.put(item)
                 continue
-            req, s = item                     # type: Request, int
-            if req.dropped():
-                # expired/cancelled: never pack rows — fail fast instead of
-                # occupying ring slots (idempotent across workers/segments)
-                self.prediction_queue.put(Message(
-                    seg.DROPPED, None, None, rid=req.rid))
-                self.timers.timed("batch_fill", t0)
-                continue
-            lo, hi = req.bounds(s)
-            width = req.x.shape[1]
-            pos = lo
-            while pos < hi:
-                if open_batch is not None and open_batch.width != width:
-                    self._flush(open_batch)   # can't mix seq widths
-                    open_batch = None
-                if open_batch is None:
-                    open_batch = self._open_batch(width)
-                f = open_batch.fill
-                fill = min(self._span - f, hi - pos)
-                open_batch.buf[f:f + fill] = req.x[pos:pos + fill]  # one copy
-                # spans never cross a compiled-batch boundary inside the
-                # slot, so every span maps to exactly one predictor chunk
-                while fill > 0:
-                    k = min(self.batch_size - f % self.batch_size, fill)
-                    open_batch.spans.append(Span(req, s, pos - lo, f, k))
-                    f += k
-                    pos += k
-                    fill -= k
-                open_batch.fill = f
-                if f == self._span:
-                    self._flush(open_batch)   # full slot: flush immediately
-                    open_batch = None
-            if open_batch is not None and req.deadline is not None:
-                # deadline-aware linger (ROADMAP item f): the slot may wait
-                # at most half the tightest packed row's remaining deadline
-                # budget — a tight-deadline row never waits out a full
-                # linger, and the other half of the budget is left for
-                # predict + combine.  Same perf_counter clock as the linger.
-                open_batch.deadline = min(
-                    open_batch.deadline,
-                    (time.perf_counter() + req.deadline) / 2.0)
-            if open_batch is not None and req.priority == seg.PRIORITY_HIGH:
-                # high-priority rows preempt the linger: flush as soon as
-                # the queue runs dry instead of waiting out max_wait_us
-                # (anything already queued still coalesces first)
-                open_batch.deadline = 0.0
-            if not self.coalesce and open_batch is not None:
-                self._flush(open_batch)       # PR-1 semantics: per-item flush
-                open_batch = None
+            open_batch = self._admit(item, open_batch)
             self.timers.timed("batch_fill", t0)
+
+    def _admit(self, item, open_batch: Optional[_OpenBatch]
+               ) -> Optional[_OpenBatch]:
+        """Pack one (request, segment) descriptor, returning the (possibly
+        new / possibly flushed) open batch.  A bulk descriptor's wait for a
+        ring slot is preemptible: when high-priority work lands in the
+        admission queue mid-wait, the high descriptors are admitted first
+        through express side buffers (recursion is one level deep — the
+        express path never blocks), then the bulk wait resumes."""
+        req, s = item                         # type: Request, int
+        if req.dropped():
+            # expired/cancelled: never pack rows — fail fast instead of
+            # occupying ring slots (idempotent across workers/segments)
+            self.prediction_queue.put(Message(
+                seg.DROPPED, None, None, rid=req.rid))
+            return open_batch
+        express = req.priority == seg.PRIORITY_HIGH
+        lo, hi = req.bounds(s)
+        width = req.x.shape[1]
+        pos = lo
+        while pos < hi:
+            if open_batch is not None and open_batch.width != width:
+                self._flush(open_batch)       # can't mix seq widths
+                open_batch = None
+            if open_batch is None:
+                open_batch = self._open_batch(width, express=express)
+                if open_batch is None:        # bulk slot wait interrupted
+                    # take_high is atomic vs a racing drain_descriptors
+                    # (which may empty the queue between a depth check and
+                    # a pop) and never swallows sentinels.  A burst of high
+                    # descriptors coalesces into ONE express batch (threaded
+                    # through the loop) instead of one padded slot each.
+                    hot = None
+                    while True:
+                        hitem = self.input_queue.take_high()
+                        if hitem is None:
+                            break
+                        hot = self._admit(hitem, hot)
+                    if hot is not None:       # high work never lingers here
+                        self._flush(hot)
+                    continue                  # resume the bulk slot wait
+            f = open_batch.fill
+            fill = min(self._span - f, hi - pos)
+            open_batch.buf[f:f + fill] = req.x[pos:pos + fill]    # one copy
+            # spans never cross a compiled-batch boundary inside the
+            # slot, so every span maps to exactly one predictor chunk
+            while fill > 0:
+                k = min(self.batch_size - f % self.batch_size, fill)
+                open_batch.spans.append(Span(req, s, pos - lo, f, k))
+                f += k
+                pos += k
+                fill -= k
+            open_batch.fill = f
+            if f == self._span:
+                self._flush(open_batch)       # full slot: flush immediately
+                open_batch = None
+        if open_batch is not None and req.deadline is not None:
+            # deadline-aware linger (ROADMAP item f): the slot may wait
+            # at most half the tightest packed row's remaining deadline
+            # budget — a tight-deadline row never waits out a full
+            # linger, and the other half of the budget is left for
+            # predict + combine.  Same perf_counter clock as the linger.
+            open_batch.deadline = min(
+                open_batch.deadline,
+                (time.perf_counter() + req.deadline) / 2.0)
+        if open_batch is not None and express:
+            # high-priority rows preempt the linger: flush as soon as
+            # the queue runs dry instead of waiting out max_wait_us
+            # (anything already queued still coalesces first)
+            open_batch.deadline = 0.0
+        if not self.coalesce and open_batch is not None:
+            self._flush(open_batch)           # PR-1 semantics: per-item flush
+            open_batch = None
+        return open_batch
 
     # ---- stage 2: predictor --------------------------------------------------
     def _predictor(self):
+        """Pop chunks from the priority dispatch queue and commit them to
+        the device, keeping at most ``dispatch_ahead`` (K) async dispatches
+        outstanding.  A window token is acquired *before* each pop, so a
+        chunk only leaves the queue when it can dispatch immediately — the
+        queue stays free to reorder until the last moment, and K bounds the
+        committed (non-preemptible) work.  Dispatched chunks accumulate in
+        a local group shipped to the sender in ONE queue hop whenever the
+        window fills, the queue runs dry, or a control item arrives —
+        per-chunk hand-offs would pay a thread wakeup per chunk
+        (chunks-per-slot × the old slot rate) without changing scheduling,
+        since the window token is what gates commitment.  A chunk whose
+        every span belongs to a cancelled/expired request is never
+        dispatched: it rides the group as a skipped chunk (the sender owns
+        the staging dict and the DROPPED accounting)."""
         while True:
-            item = self._batch_q.get()
-            if item is None:
-                self._send_q.put(None)
-                return
-            slot, buf, chunks, spans = item
+            # grab every instantly-available window token (>= 1, blocking
+            # for the first) and pop that many chunks in ONE queue lock
+            # round — per-chunk lock rounds would pay a contended lock +
+            # thread wakeup per chunk with identical commitment semantics,
+            # since the token count is what bounds the committed window
+            self._dispatch_sem.acquire()
+            tokens = 1
+            while tokens < self.dispatch_ahead and \
+                    self._dispatch_sem.acquire(blocking=False):
+                tokens += 1
+            items = self._dispatch_q.get_batch(tokens)
+            group: List[tuple] = []
+            committed = 0
+            stop = False
             t0 = time.perf_counter()
-            outs = None
-            if self.fake and self.fake_delay_us:
-                time.sleep(self.fake_delay_us * 1e-6 * len(chunks))
-            if not self.fake:
-                outs = []
-                for off, bucket, valid in chunks:
-                    view = buf[off:off + bucket]
+            for item in items:
+                if item is None:
+                    stop = True
+                    break
+                if isinstance(item, FlushBarrier):
+                    if group:         # every earlier chunk is dispatched
+                        self._send_q.put(group)
+                        group = []
+                    item.done.set()
+                    continue
+                chunk: ChunkDesc = item
+                self.timers.add("dispatch_wait.high" if chunk.level ==
+                                seg.PRIORITY_HIGH else "dispatch_wait.normal",
+                                t0 - chunk.t_enq)
+                if chunk.spans and all(sp.req.dropped()
+                                       for sp in chunk.spans):
+                    group.append((chunk, None, t0, True))   # never dispatched
+                    continue
+                committed += 1
+                y = None
+                if self.fake:
+                    if self.fake_delay_us:    # simulated device time
+                        time.sleep(self.fake_delay_us * 1e-6)
+                else:
+                    view = chunk.ref.buf[chunk.off:chunk.off + chunk.bucket]
                     if self._jax_device is not None:
                         x = jax.device_put(view, self._jax_device)
                     else:
                         x = jnp.asarray(view)
-                    fe = (self.frontend[:bucket]
+                    fe = (self.frontend[:chunk.bucket]
                           if self.frontend is not None else None)
-                    y = self.predict_fn(self.params, x, fe)
-                    outs.append(y)             # async dispatch: no block here
-            self._send_q.put((slot, buf, spans, outs, chunks, t0))
-            self.timers.timed("predict", t0)
+                    y = self.predict_fn(self.params, x, fe)  # async dispatch
+                group.append((chunk, y, t0, False))
+            for _ in range(tokens - committed):   # unused / skipped tokens
+                self._dispatch_sem.release()
+            if group:
+                self._send_q.put(group)
+            if committed:
+                self.timers.timed("predict", t0)
+            if stop:
+                self._send_q.put(None)
+                return
 
     # ---- stage 3: sender -----------------------------------------------------
     def _sender(self):
-        """Walk each batch's scatter descriptor and route rows back to their
-        segments.  A segment's spans all pass through THIS sender in
-        seg_off order (the broadcaster assigns every (segment, model) pair to
-        one instance and batches flow FIFO), so the sender reassembles them
-        in a local staging dict and forwards ONE segment-level contribution —
-        per-span forwarding would multiply combiner/accumulator traffic by
-        batches-per-segment and serialize senders on the combiner lock."""
+        """Materialize each chunk's output and scatter its spans back to
+        their segments, forwarding a (request, segment) contribution **as
+        soon as its last span's chunk returns** — early per-segment
+        forwarding; the whole slot no longer has to retire first.  All of a
+        segment's spans still pass through THIS sender (the broadcaster
+        assigns every (segment, model) pair to one instance), but priority
+        reordering in the dispatch queue means they may arrive out of
+        seg_off order, so staging is row-count-based with parts keyed by
+        segment offset; downstream accounting already counts rows.  Still
+        ONE contribution per (request, segment) — per-span forwarding would
+        multiply combiner/accumulator traffic by chunks-per-segment and
+        serialize senders on the combiner lock.  The sender also owns the
+        DROPPED path: spans of cancelled/expired requests (and whole
+        skipped chunks) purge their staging entry and post the rows to the
+        ``rows_dropped`` counter, keyed by an idempotent ``DROPPED``
+        resolution message."""
         on_device = self.combiner is not None
-        staging: Dict[tuple, list] = {}        # (rid, s) -> [rows, parts]
+        staging: Dict[tuple, list] = {}     # (rid, s) -> [rows, {seg_off: P}]
         while True:
-            item = self._send_q.get()
-            if item is None:
+            batch = self._send_q.get()
+            if batch is None:
                 return
-            slot, buf, spans, outs, chunks, t_dispatch = item
             t0 = time.perf_counter()
-            if outs is not None:
-                if on_device:
-                    for y in outs:
-                        y.block_until_ready()  # compute done; stays on device
-                else:
-                    outs = [np.asarray(y) for y in outs]   # d->h sync
-            self._recycle(slot, buf)           # ring slot safe to reuse now
-            now = self.timers.timed("transfer", t0)
-            if self.profiler is not None and (outs is not None
-                                              or self.fake_delay_us):
-                # live bench feed (DESIGN.md §8): dispatch-to-materialized
-                # wall time for this slot, attributed to its chunks
-                # proportionally by dispatched rows
-                dt = now - t_dispatch
-                total = sum(c[1] for c in chunks) or 1
-                for _, bucket, valid in chunks:
+            profiled = []                  # (bucket, valid) materialized
+            for chunk, y, t_dispatch, skipped in batch:
+                self._send_chunk(chunk, y, skipped, staging, on_device,
+                                 profiled)
+            now = self.timers.timed("transfer", t0)   # sync+scatter, group
+            if profiled:
+                # live bench feed (DESIGN.md §8): the group shares one
+                # dispatch timestamp, so dispatch-to-materialized wall time
+                # is attributed to its chunks proportionally by dispatched
+                # rows — charging each chunk the cumulative group elapsed
+                # would inflate the profile by up to dispatch_ahead x
+                dt = now - batch[0][2]
+                total = sum(b for b, _ in profiled) or 1
+                for bucket, valid in profiled:
                     self.profiler.observe(self.model_idx, self.device.key(),
                                           bucket, valid, dt * bucket / total)
-            for sp in spans:
-                lo, hi = sp.req.bounds(sp.s)
-                key = (sp.req.rid, sp.s)
-                st = staging.get(key)
-                if st is None:
-                    st = staging[key] = [0, []]
-                # FIFO pipeline order is what makes append-reassembly valid;
-                # seg_off pins that assumption instead of trusting it
-                assert sp.seg_off == st[0], (key, sp.seg_off, st[0])
-                if outs is not None:
-                    # chunk-aligned spans: batch_off names the chunk directly
-                    y = outs[sp.batch_off // self.batch_size]
-                    off = sp.batch_off % self.batch_size
-                    st[1].append(y[off:off + sp.n])
-                st[0] += sp.n
-                if st[0] < hi - lo:
-                    continue                   # segment still in flight
-                del staging[key]
-                if outs is None:               # fake predictor: instant zeros
-                    P = np.zeros((hi - lo, self.num_classes), np.float32)
-                elif len(st[1]) == 1:
-                    P = st[1][0]
-                elif on_device:
-                    P = jnp.concatenate(st[1], axis=0)
-                else:
-                    P = np.concatenate(st[1], axis=0)
+
+    def _send_chunk(self, chunk, y, skipped, staging, on_device, profiled):
+        if not skipped:
+            if y is not None:
                 if on_device:
-                    self.combiner.add(sp.req, sp.s, self.model_idx, P)
+                    y.block_until_ready()  # compute done; stays on device
                 else:
+                    y = np.asarray(y)      # d->h sync
+            self._dispatch_sem.release()   # window slot free again
+            if self.profiler is not None and (y is not None
+                                              or self.fake_delay_us):
+                profiled.append((chunk.bucket, chunk.valid))
+        if chunk.ref.release():            # last outstanding chunk:
+            self._recycle(chunk.ref.slot, chunk.ref.buf)   # recycle slot
+        dropped_rids = set()
+        for sp in chunk.spans:
+            lo, hi = sp.req.bounds(sp.s)
+            key = (sp.req.rid, sp.s)
+            if skipped or sp.req.dropped():
+                # purge any rows staged by this segment's earlier chunks
+                # (whatever order the chunks retired in, its LAST chunk
+                # runs this branch too, so no entry can leak) and post
+                # the idempotent DROPPED resolution
+                staging.pop(key, None)
+                self.timers.inc("rows_dropped", sp.n)
+                if sp.req.rid not in dropped_rids:
+                    dropped_rids.add(sp.req.rid)
                     self.prediction_queue.put(Message(
-                        sp.s, self.model_idx, np.asarray(P),
-                        rid=sp.req.rid))
+                        seg.DROPPED, None, None, rid=sp.req.rid))
+                continue
+            st = staging.get(key)
+            if st is None:
+                st = staging[key] = [0, {}]
+            if y is not None:
+                off = sp.batch_off - chunk.off   # row within this chunk
+                st[1][sp.seg_off] = y[off:off + sp.n]
+            st[0] += sp.n
+            if st[0] < hi - lo:
+                continue                   # segment still in flight
+            del staging[key]
+            if y is None and not st[1]:    # fake predictor: instant zeros
+                P = np.zeros((hi - lo, self.num_classes), np.float32)
+            else:
+                parts = [st[1][k] for k in sorted(st[1])]
+                if len(parts) == 1:
+                    P = parts[0]
+                elif on_device:
+                    P = jnp.concatenate(parts, axis=0)
+                else:
+                    P = np.concatenate(parts, axis=0)
+            if on_device:
+                self.combiner.add(sp.req, sp.s, self.model_idx, P)
+            else:
+                self.prediction_queue.put(Message(
+                    sp.s, self.model_idx, np.asarray(P),
+                    rid=sp.req.rid))

@@ -135,6 +135,8 @@ def test_metrics_endpoint(server):
     assert m["counters"]["rows_valid"] > 0
     assert any(k.startswith("queue_depth.") for k in m["gauges"])
     assert "accumulate" in m["stages"]
+    # per-class latency percentiles (the hp_p50 SLO view, DESIGN.md §3/§6)
+    assert m["latency"]["normal"]["p50_ms"] > 0
 
 
 def test_http_client_facade(server):
