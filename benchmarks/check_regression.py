@@ -38,6 +38,11 @@ import sys
 # skewed_load gates the ISSUE-4 acceptance: work stealing >= 1.3x throughput
 # under a 4:1 per-member load skew (absolute floor; the scenario runs on
 # simulated device time, so it is deterministic across runners).
+# fault_recovery gates the ISSUE-6 acceptance: killing one data-parallel
+# sibling mid-trace loses zero requests (completed_ratio == 1.0 at full
+# quality — replay, not degradation) and crash-to-replay recovery lands
+# within a second (recovery_ok folds that bound with exactly one
+# quarantine); raw recovery_s is reported in BENCH_serving.json ungated.
 GATED_METRICS = [
     ("speedup", None, None),                  # pipelined engine vs seed
     ("large_request_ratio", None, 0.90),      # coalesced vs PR-1, big request
@@ -53,6 +58,8 @@ GATED_METRICS = [
     # at 0.85-0.95
     ("mixed_priority.throughput_ratio", None, 0.80),
     ("skewed_load.steal_throughput_ratio", None, 1.30),
+    ("fault_recovery.completed_ratio", 0.0, 1.0),
+    ("fault_recovery.recovery_ok", 0.0, 1.0),
 ]
 
 

@@ -39,7 +39,15 @@ transfers, combination.  Scenarios:
                     member's segments queued behind the slow instance while
                     the fast sibling idles.  Runs the identical trace with
                     the work-stealing fast path off vs on and reports the
-                    throughput ratio.
+                    throughput ratio;
+  * ``fault_recovery``  the chaos workload (ISSUE 6, DESIGN.md §10): two
+                    data-parallel siblings of a hot member on simulated
+                    device time, a ``FaultPlan`` killing one sibling's
+                    predictor a few chunks into the trace.  The supervisor
+                    must quarantine the instance and replay its outstanding
+                    units on the survivor: the scenario reports the
+                    completed-at-full-quality ratio, the crash-to-replay
+                    recovery latency, and a ``recovery_ok`` verdict.
 
 Acceptance (ISSUE 2): many_small coalesced >= 1.5x the PR-1 engine
 segments/sec; single large-request throughput within 5% (the
@@ -52,6 +60,10 @@ Acceptance (ISSUE 4): work stealing >= 1.3x throughput under the 4:1 skew
 Acceptance (ISSUE 5): with the chunk-granular dispatch queue, high-priority
 p50 improves >= 4x over strict FIFO (``mixed_priority.hp_p50_improvement``)
 while hp_p99_improvement and throughput_ratio hold their floors.
+Acceptance (ISSUE 6): killing one sibling mid-trace loses zero requests
+(``fault_recovery.completed_ratio`` == 1.0 at full quality) and recovery
+lands within a second (``fault_recovery.recovery_ok`` == 1.0), both gated
+by check_regression.py.
 """
 from __future__ import annotations
 
@@ -246,10 +258,84 @@ def _measure_skewed(cfgs, params, devs, seq: int, requests: int,
     }
 
 
+def _measure_fault_recovery(cfgs, params, seq: int, requests: int,
+                            fake_delay_us: int) -> dict:
+    """One chaos pass (ISSUE 6): member 0 runs two equal data-parallel
+    siblings (d0/d1); a FaultPlan kills the d1 sibling's predictor after 3
+    chunks.  Simulated device time makes the service rates — and thus the
+    crash position in the trace — deterministic on any host.  A 1 ms
+    watcher thread timestamps the crash (``worker_crashes`` counter, set on
+    the dying thread) and the recovery (``segments_replayed``, set when the
+    supervisor resubmits the dead worker's outstanding units), so
+    ``recovery_s`` is the supervisor's crash-to-replay latency."""
+    import threading
+
+    from repro.serving.faults import FaultPlan, FaultSpec
+    from repro.serving.system import InferenceSystem
+
+    seg_sz = 64
+    devs = host_cpus(2, memory_bytes=8 * GiB)
+    A = np.array([[seg_sz, seg_sz], [seg_sz, 0]])
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    fp = FaultPlan(FaultSpec(stage="predictor", kind="raise", after=3,
+                             worker="w1.0"))
+    srng = np.random.default_rng(6)
+    Xs = [srng.integers(0, 512, (seg_sz, seq)).astype(np.int32)
+          for _ in range(requests)]
+    marks: dict = {}
+    with InferenceSystem(cfgs, params, alloc, segment_size=seg_sz,
+                         max_seq=seq, fake=True,
+                         fake_delay_us=fake_delay_us,
+                         max_in_flight=requests, supervise=True,
+                         supervise_interval_s=0.01,
+                         fault_plan=fp) as system:
+
+        def watch():
+            while not marks.get("stop"):
+                c = system.serving_counters()
+                if "t_crash" not in marks and c.get("worker_crashes", 0):
+                    marks["t_crash"] = time.perf_counter()
+                if c.get("segments_replayed", 0):
+                    marks.setdefault("t_crash", time.perf_counter())
+                    marks["t_recovered"] = time.perf_counter()
+                    return
+                time.sleep(0.001)
+
+        wt = threading.Thread(target=watch)
+        wt.start()
+        t0 = time.perf_counter()
+        handles = [system.predict_async(x) for x in Xs]
+        full_quality = 0
+        for h in handles:
+            y = h.result(600.0)           # raises on any lost request
+            if y.shape[0] == seg_sz and h.quality == 1.0:
+                full_quality += 1
+        dt = time.perf_counter() - t0
+        marks["stop"] = True
+        wt.join(5.0)
+        counters = system.serving_counters()
+    recovery_s = (marks["t_recovered"] - marks["t_crash"]
+                  if "t_recovered" in marks else float("inf"))
+    completed_ratio = full_quality / requests
+    recovery_ok = float(completed_ratio == 1.0 and
+                        counters.get("quarantines", 0) == 1 and
+                        recovery_s <= 1.0)
+    return {
+        "requests": requests,
+        "seconds": dt,
+        "completed_ratio": completed_ratio,
+        "recovery_s": recovery_s,
+        "recovery_ok": recovery_ok,
+        "segments_replayed": counters.get("segments_replayed", 0),
+        "worker_crashes": counters.get("worker_crashes", 0),
+    }
+
+
 def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
         small_concurrency=48, small_rounds=8, small_max_wait_us=2000,
         mixed_rounds=3, mixed_smalls=8, mixed_bulk=1024,
-        skew_requests=40, skew_delay_us=4000):
+        skew_requests=40, skew_delay_us=4000,
+        fault_requests=32, fault_delay_us=4000):
     import jax
     import repro.models as M
     from repro.serving.system import InferenceSystem
@@ -339,6 +425,10 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
         skewed["no_steal"]["segments_per_sec"])
     results["skewed_load"] = skewed
 
+    # ---- fault_recovery: kill a sibling mid-trace, lose nothing (ISSUE 6) ---
+    results["fault_recovery"] = _measure_fault_recovery(
+        small_cfgs, small_params, seq, fault_requests, fault_delay_us)
+
     if csv:
         print("serving_hotpath:variant,segments_per_sec,messages_per_request")
         for name in ("seed", "pipelined", "coalesced"):
@@ -376,6 +466,11 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
                   f"{r['stolen_descriptors']}")
         print(f"serving_hotpath:skewed_load.steal_throughput_ratio,"
               f"{skewed['steal_throughput_ratio']:.2f},")
+        fr = results["fault_recovery"]
+        print(f"serving_hotpath:fault_recovery.completed_ratio,"
+              f"{fr['completed_ratio']:.3f},{fr['segments_replayed']}")
+        print(f"serving_hotpath:fault_recovery.recovery_s,"
+              f"{fr['recovery_s']:.4f},{fr['recovery_ok']:.0f}")
         for name in ("pipelined", "coalesced"):
             for stage, t in results[name]["stage_timings"].items():
                 print(f"serving_hotpath:{name}.{stage},"

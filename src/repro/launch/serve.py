@@ -49,6 +49,31 @@ def main(argv=None):
     ap.add_argument("--no-steal", action="store_true",
                     help="disable the work-stealing fast path (replanning "
                          "only, with --reconfig)")
+    # fault tolerance (DESIGN.md §10)
+    ap.add_argument("--no-supervise", action="store_true",
+                    help="disable worker supervision and fall back to the "
+                         "paper's all-or-nothing failure model: any worker "
+                         "crash fails every in-flight request and shuts the "
+                         "system down (§II.C.2)")
+    ap.add_argument("--watchdog-s", type=float, default=5.0,
+                    help="a worker stage mid-work longer than this is "
+                         "declared stalled and its instance quarantined")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="max times one request's chunks may be resubmitted "
+                         "after worker failures before it fails with "
+                         "RetriesExhausted (HTTP 503)")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="check materialized device outputs for NaN; a "
+                         "poisoned output crashes its worker (quarantine + "
+                         "replay on a sibling) instead of folding into Y")
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="SPEC",
+                    help="inject a deterministic fault for chaos testing; "
+                         "repeatable.  SPEC is key=value pairs: "
+                         "stage=batcher|predictor|sender|spawn "
+                         "[kind=raise|stall|nan] [after=N] [stall_s=S] "
+                         "[worker=ID-prefix], e.g. "
+                         "--fault stage=predictor,after=100,worker=w0.0")
     args = ap.parse_args(argv)
 
     import jax
@@ -94,12 +119,26 @@ def main(argv=None):
     print(f"bench: A1={res.wfd_score:.1f} -> A2={res.final_score:.1f} "
           f"samples/s{' (cached)' if res.from_cache else ''}")
 
+    fault_plan = None
+    if args.fault:
+        from repro.serving.faults import FaultPlan, FaultSpec
+        fault_plan = FaultPlan(*[FaultSpec.parse(s) for s in args.fault])
+        print(f"fault injection armed: {args.fault}")
     system = InferenceSystem(cfgs, params, res.matrix,
                              segment_size=args.segment_size,
                              max_seq=args.seq, combine=args.combine,
                              max_wait_us=args.max_wait_us,
                              linger=args.linger,
-                             dispatch_ahead=args.dispatch_ahead or None)
+                             dispatch_ahead=args.dispatch_ahead or None,
+                             supervise=not args.no_supervise,
+                             watchdog_s=args.watchdog_s,
+                             retry_budget=args.retry_budget,
+                             nan_guard=args.nan_guard,
+                             fault_plan=fault_plan)
+    if not args.no_supervise:
+        print(f"supervision on (watchdog {args.watchdog_s:.1f}s, retry "
+              f"budget {args.retry_budget}); worker failures quarantine the "
+              f"instance — health gauges in GET /metrics")
     controller = None
     if args.reconfig:
         from repro.serving.control import ReconfigController

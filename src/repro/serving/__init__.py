@@ -5,17 +5,20 @@ from repro.serving.accumulator import PredictionAccumulator, RequestHandle
 from repro.serving.admission import AdmissionQueue, DispatchQueue, chunk_level
 from repro.serving.client import ClientHandle, EnsembleClient
 from repro.serving.combiner import DeviceCombiner
+from repro.serving.faults import FaultPlan, FaultSpec, InjectedFault
 from repro.serving.metrics import StageTimers
 from repro.serving.request_cache import PredictionCache
 from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, PRIORITY_HIGH,
                                     PRIORITY_NORMAL, ChunkDesc,
-                                    DeadlineExceeded, Message,
-                                    PredictOptions, Request,
-                                    RequestCancelled, SlotRef)
+                                    DeadlineExceeded, MemberUnavailable,
+                                    Message, PredictOptions, Request,
+                                    RequestCancelled, RetriesExhausted,
+                                    ServingUnavailable, SlotRef,
+                                    WorkerCrashed)
 from repro.serving.server import AdaptiveBatcher, serve
 from repro.serving.system import InferenceSystem
 from repro.serving.worker import Worker, bucket_for, make_predict_fn
-from repro.serving.control import LiveBench, ReconfigController
+from repro.serving.control import LiveBench, ReconfigController, Supervisor
 
 __all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
            "Message", "Request", "RequestHandle", "PredictionAccumulator",
@@ -24,4 +27,7 @@ __all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
            "ClientHandle", "AdmissionQueue", "DispatchQueue", "chunk_level",
            "ChunkDesc", "SlotRef", "PredictionCache",
            "DeadlineExceeded", "RequestCancelled", "PRIORITY_HIGH",
-           "PRIORITY_NORMAL", "LiveBench", "ReconfigController"]
+           "PRIORITY_NORMAL", "LiveBench", "ReconfigController",
+           "FaultPlan", "FaultSpec", "InjectedFault", "Supervisor",
+           "ServingUnavailable", "WorkerCrashed", "MemberUnavailable",
+           "RetriesExhausted"]

@@ -55,8 +55,8 @@ import numpy as np
 
 from repro.serving import segments as seg
 from repro.serving.metrics import StageTimers
-from repro.serving.segments import (DeadlineExceeded, Message, Request,
-                                    RequestCancelled)
+from repro.serving.segments import (DeadlineExceeded, MemberUnavailable,
+                                    Message, Request, RequestCancelled)
 
 
 class RequestHandle:
@@ -71,6 +71,14 @@ class RequestHandle:
         self.done = threading.Event()
         self.error: Optional[BaseException] = None
         self.messages = 0                     # data messages folded
+        # graceful degradation (DESIGN.md §10): member-rows forgiven because
+        # their member lost its last instance mid-request.  quality is the
+        # fraction of member-rows actually served (1.0 = full ensemble);
+        # _missing_w tracks the per-row missing combine weight so completed
+        # rows renormalize over the members that did report.
+        self.quality = 1.0
+        self.degraded_rows = 0
+        self._missing_w: Optional[np.ndarray] = None
         self.on_segment = on_segment          # streaming-partials callback
         self._seg_buffers: Dict[int, Dict[int, np.ndarray]] = {}
         self._seg_rows: Dict[int, int] = {}   # pallas path: rows buffered
@@ -217,6 +225,12 @@ class PredictionAccumulator:
                 # request; resolve the future (idempotent across workers)
                 self._drop(msg.rid)
                 continue
+            if msg.P is None:
+                # forgiveness message (s >= 0, P=None, m = the dead member):
+                # the member's sole instance was quarantined — complete the
+                # request without these rows (DESIGN.md §10)
+                self._degrade(msg)
+                continue
             self._accumulate(msg)
 
     def _drop(self, rid: int) -> None:
@@ -230,6 +244,63 @@ class PredictionAccumulator:
         else:
             self._finish(handle, DeadlineExceeded(
                 f"request {rid} missed its deadline in the admission queue"))
+
+    def _degrade(self, msg: Message) -> None:
+        """Debit a dead member's rows for one segment without folding
+        anything, tracking the missing combine weight for the
+        completion-time renormalization.  The ``pallas`` combine cannot
+        degrade — its fused kernel waits for ALL members' staged rows — so
+        the request fails with :class:`MemberUnavailable` instead."""
+        with self._lock:
+            handle = self._requests.get(msg.rid)
+        if handle is None:                    # stale (failed/completed)
+            return
+        req = handle.req
+        if req.combine == "pallas":
+            self._finish(handle, MemberUnavailable(
+                f"member {msg.m} lost its last instance and the 'pallas' "
+                f"combine needs every member's rows"))
+            return
+        lo, hi = req.bounds(msg.s)
+        rows = hi - lo
+        if handle._missing_w is None:
+            handle._missing_w = np.zeros(req.n, np.float32)
+        handle._missing_w[lo:hi] += req.weights.get(msg.m, 0.0)
+        handle.degraded_rows += rows
+        handle.remaining -= rows
+        if handle._seg_remaining is not None:
+            left = handle._seg_remaining[msg.s] - rows
+            handle._seg_remaining[msg.s] = left
+            if left == 0:
+                # streaming edge (documented): a degraded segment's partial
+                # fires with the raw (un-renormalized) rows — the final Y
+                # from result() is renormalized, the stream is best-effort
+                try:
+                    handle.on_segment(msg.s, lo, hi, handle.Y[lo:hi])
+                except Exception as e:
+                    self._finish(handle, e)
+                    return
+        if handle.remaining == 0:
+            self._complete(handle)
+
+    def _complete(self, handle: RequestHandle) -> None:
+        """All member-rows accounted for: renormalize any degraded rows over
+        the members that did report, stamp the quality, and finish."""
+        if handle.degraded_rows:
+            req = handle.req
+            mw = handle._missing_w
+            mask = mw[:req.n] > 0
+            if mask.any():
+                # served weights summed to (1 - missing); dividing restores
+                # a proper convex combination over the surviving members.
+                # A row that lost every member keeps Y=0 (0 / eps) — its
+                # weight mass is gone entirely.
+                denom = np.maximum(1.0 - mw[:req.n][mask], 1e-12)
+                handle.Y[mask] /= denom[:, None]
+            total = req.n * len(req.members)
+            handle.quality = 1.0 - handle.degraded_rows / max(total, 1)
+            self.timers.inc("degraded_requests")
+        self._finish(handle)
 
     _expected_ready_count = None
 
@@ -278,7 +349,7 @@ class PredictionAccumulator:
                     return
         self.timers.add("accumulate", time.perf_counter() - t0)
         if handle.remaining == 0:
-            self._finish(handle)
+            self._complete(handle)
 
     def _fold_member(self, handle: RequestHandle, msg: Message,
                      lo: int, hi: int):

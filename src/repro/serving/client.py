@@ -32,9 +32,9 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.serving.request_cache import PredictionCache
-from repro.serving.segments import (DeadlineExceeded, PredictOptions,
-                                    RequestCancelled, priority_level,
-                                    PRIORITY_HIGH)
+from repro.serving.segments import (DeadlineExceeded, MemberUnavailable,
+                                    PredictOptions, RequestCancelled,
+                                    priority_level, PRIORITY_HIGH)
 
 
 class ClientHandle:
@@ -85,6 +85,15 @@ class ClientHandle:
             return True
         return self._inner.done.is_set()
 
+    def quality(self) -> float:
+        """Fraction of member-rows actually served (DESIGN.md §10): 1.0 =
+        full ensemble; < 1.0 means the result is a degraded partial combine
+        (a member lost its last instance mid-request).  Cached rows were
+        full-quality when inserted."""
+        if self._inner is None:
+            return 1.0
+        return getattr(self._inner, "quality", 1.0)
+
 
 class _HttpFuture:
     """Duck-types RequestHandle for the HTTP transport: a worker thread owns
@@ -96,13 +105,18 @@ class _HttpFuture:
         self._result: Optional[np.ndarray] = None
         self._error: Optional[BaseException] = None
         self._cancelled = False
+        self.quality = 1.0             # < 1.0: degraded partial combine
         self._thread = threading.Thread(target=self._run, args=(call,),
                                         daemon=True)
         self._thread.start()
 
     def _run(self, call):
         try:
-            self._result = call()
+            res = call()
+            if isinstance(res, tuple):
+                self._result, self.quality = res
+            else:
+                self._result = res
         except BaseException as e:
             self._error = e
         self.done.set()
@@ -228,9 +242,14 @@ class EnsembleClient:
             detail = e.read().decode(errors="replace")
             if e.code == 504:
                 raise DeadlineExceeded(detail) from None
+            if e.code == 503:
+                # transient capacity failure (DESIGN.md §10): the server
+                # set Retry-After — the request is retryable, not broken
+                raise MemberUnavailable(detail) from None
             raise RuntimeError(f"/v2/predict failed ({e.code}): {detail}") \
                 from None
-        return np.asarray(r["predictions"], np.float32)
+        return (np.asarray(r["predictions"], np.float32),
+                float(r.get("quality", 1.0)))
 
     def _http_json(self, method: str, path: str, payload=None):
         req = urllib.request.Request(

@@ -13,9 +13,14 @@ the live serving hot path.
 * :mod:`stealing` — re-routes queued descriptors from a deep admission
   queue to an idle data-parallel sibling, moving the device combiners'
   expected-row maps with them.
+* :class:`Supervisor` — per-worker heartbeat/liveness sweep that contains
+  instance failures (quarantine + chunk replay / graceful degradation,
+  DESIGN.md §10) instead of the paper's all-or-nothing sentinel.
 """
 from repro.serving.control.controller import ReconfigController
 from repro.serving.control.livebench import LiveBench
 from repro.serving.control.stealing import balance_member, steal_from
+from repro.serving.control.supervisor import Supervisor
 
-__all__ = ["ReconfigController", "LiveBench", "balance_member", "steal_from"]
+__all__ = ["ReconfigController", "LiveBench", "balance_member", "steal_from",
+           "Supervisor"]

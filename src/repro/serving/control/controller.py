@@ -45,7 +45,9 @@ class ReconfigController:
                  min_gain: float = 1.15, min_observations: int = 32,
                  batch_sizes: Sequence[int] = DEFAULT_BATCH_SIZES,
                  max_iter: int = 3, max_neighs: int = 24,
-                 replan: bool = True, steal: bool = True, seed: int = 0):
+                 replan: bool = True, steal: bool = True, seed: int = 0,
+                 spawn_backoff_s: float = 0.5,
+                 spawn_backoff_cap_s: float = 30.0):
         self.system = system
         self.live = live or LiveBench(system.cfgs, seq=system.max_seq)
         self.interval_s = interval_s
@@ -65,8 +67,18 @@ class ReconfigController:
         self._stats_lock = threading.Lock()
         self.counters = {k: 0 for k in
                          ("replans", "applied", "spawns", "drains",
-                          "rebatches", "steals", "stolen")}
+                          "rebatches", "steals", "stolen",
+                          "spawn_failures", "respawns")}
         self.events: "deque[dict]" = deque(maxlen=64)
+        # per-(device, member) spawn backoff: a failed spawn (device can't
+        # host it) is skipped silently until its deadline instead of being
+        # re-proposed — and re-failing — every replan tick (DESIGN.md §10)
+        self.spawn_backoff_s = spawn_backoff_s
+        self.spawn_backoff_cap_s = spawn_backoff_cap_s
+        self._backoff: dict = {}          # (d, m) -> [fails, retry_at]
+        # members whose last instance was quarantined: (d, batch) to respawn
+        # in the background (Supervisor -> note_member_down)
+        self._respawns: dict = {}         # m -> (d, batch)
         system.set_profiler(self.live)    # workers + broadcaster feed it
         system.controller = self
 
@@ -91,6 +103,8 @@ class ReconfigController:
         next_replan = time.perf_counter() + self.interval_s
         while not self._stop.wait(tick):
             try:
+                if self._respawns:        # member down: recovery first
+                    self.respawn_once()
                 if self.steal_enabled:
                     self.steal_once()
                 if self.replan_enabled and \
@@ -113,6 +127,36 @@ class ReconfigController:
                 self.counters["steals"] += 1
                 self.counters["stolen"] += moved
         return moved
+
+    # ---- member respawn (fault tolerance, DESIGN.md §10) ---------------------
+    def note_member_down(self, m: int, d: int, batch: int) -> None:
+        """Called by the supervisor when member ``m`` lost its LAST instance
+        (it was on device ``d`` at ``batch``).  Records the respawn intent;
+        the controller loop retries it in the background under the spawn
+        backoff until an instance lands."""
+        with self._stats_lock:
+            self._respawns[m] = (d, batch)
+        self._event("member_down", f"m{m}: last instance (d{d} b{batch}) "
+                                   f"quarantined; respawning in background")
+
+    def respawn_once(self) -> int:
+        """Attempt every pending member respawn (backoff-gated).  Returns
+        the number of members brought back."""
+        with self._stats_lock:
+            pending = dict(self._respawns)
+        back = 0
+        for m, (d, b) in pending.items():
+            if self.system.instances(m):  # raced a concurrent recovery
+                with self._stats_lock:
+                    self._respawns.pop(m, None)
+                continue
+            if self._spawn(d, m, b, self.system.generation):
+                with self._stats_lock:
+                    self._respawns.pop(m, None)
+                    self.counters["respawns"] += 1
+                self._event("respawned", f"member {m} back on d{d} b{b}")
+                back += 1
+        return back
 
     # ---- the slow path: live replanning --------------------------------------
     def replan_once(self) -> bool:
@@ -206,11 +250,25 @@ class ReconfigController:
         return None
 
     def _spawn(self, d: int, m: int, b: int, gen: int) -> bool:
+        key = (d, m)
+        now = time.perf_counter()
+        state = self._backoff.get(key)
+        if state is not None and now < state[1]:
+            return False                  # still backing off; skip silently
         try:
             self.system.spawn_instance(d, m, b, generation=gen)
+            self._backoff.pop(key, None)  # success clears the backoff
             return True
         except Exception as e:            # reject ONE action, keep serving
-            self._event("spawn_failed", f"d{d} m{m} b{b}: {e}")
+            fails = (state[0] if state else 0) + 1
+            delay = min(self.spawn_backoff_cap_s,
+                        self.spawn_backoff_s * 2 ** (fails - 1))
+            self._backoff[key] = [fails, now + delay]
+            with self._stats_lock:
+                self.counters["spawn_failures"] += 1
+            self._event("spawn_failed",
+                        f"d{d} m{m} b{b}: {e} (attempt {fails}, "
+                        f"next retry in {delay:.1f}s)")
             return False
 
     def _drain(self, w) -> bool:

@@ -86,6 +86,30 @@ class RequestCancelled(Exception):
     """The request was cancelled via ``RequestHandle.cancel()``."""
 
 
+class ServingUnavailable(RuntimeError):
+    """Base of the transient-capacity failure taxonomy (DESIGN.md §10).
+
+    Unlike :class:`DeadlineExceeded` (the request was too slow) these mean
+    the *system* momentarily lacks the capacity to serve the request — the
+    HTTP layer maps them to 503 + ``Retry-After`` so clients retry instead
+    of treating them as permanent errors."""
+
+
+class WorkerCrashed(ServingUnavailable):
+    """A worker stage thread died (or stalled past the watchdog) while the
+    request had work on it and recovery could not complete it."""
+
+
+class MemberUnavailable(ServingUnavailable):
+    """An ensemble member the request needs has no live instance (its last
+    worker was quarantined and the respawn has not landed yet)."""
+
+
+class RetriesExhausted(ServingUnavailable):
+    """The request's chunk-replay budget ran out: its work was resubmitted
+    after worker failures more times than ``retry_budget`` allows."""
+
+
 def priority_level(priority) -> int:
     """Normalize a priority spec ("high"/"normal" or the int constants)."""
     if isinstance(priority, str):
@@ -205,6 +229,7 @@ class Request:
     priority: int = PRIORITY_NORMAL
     deadline: Optional[float] = None    # absolute perf_counter seconds
     t_submit: Optional[float] = None    # admission time (perf_counter)
+    retries: int = 0                    # quarantine replays charged so far
     cancel_event: threading.Event = field(default_factory=threading.Event,
                                           repr=False, compare=False)
 

@@ -8,7 +8,11 @@ Endpoints (stdlib only):
                            "combine": "mean|weighted|vote|pallas",
                            "cache": "use|bypass|refresh"}     (optional)
                     -> {"predictions": [[...], ...]}
-                    (504 when the deadline expires, 400 on bad input)
+                       plus "quality" < 1.0 when the result is a degraded
+                       partial-ensemble combine (DESIGN.md §10)
+                    (504 when the deadline expires; 503 + Retry-After when
+                    capacity is transiently unavailable — quarantined
+                    member, retries exhausted; 400 on bad input)
   POST /predict     v1 compatibility shim: the original adaptive batcher —
                     requests buffered until a segment fills or ``max_wait_s``
                     elapses, then predicted as one batch (paper §I.B).  New
@@ -35,8 +39,11 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.serving.client import EnsembleClient
-from repro.serving.segments import DeadlineExceeded, PredictOptions
+from repro.serving.segments import (DeadlineExceeded, PredictOptions,
+                                    ServingUnavailable)
 from repro.serving.system import InferenceSystem
+
+RETRY_AFTER_S = 1       # advisory client backoff on 503 (respawn latency)
 
 
 class _Pending:
@@ -144,11 +151,13 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
         def log_message(self, *a):              # quiet
             pass
 
-        def _json(self, code: int, payload):
+        def _json(self, code: int, payload, headers=None):
             body = json.dumps(payload).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
+            for k, v in (headers or {}).items():
+                self.send_header(k, v)
             self.end_headers()
             self.wfile.write(body)
 
@@ -189,11 +198,31 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
                 if self.path == "/v2/predict":
                     x = self._tokens(payload)
                     opts = _parse_options(payload)
+                    quality = 1.0
                     try:
-                        y = client.predict(x, opts)
+                        h = client.predict_async(x, opts)
+                        y = h.result(600.0)
+                        quality = h.quality()
                     except DeadlineExceeded as e:
                         self._json(504, {"error": f"deadline exceeded: {e}"})
                         return
+                    except ServingUnavailable as e:
+                        # transient capacity failure (quarantined member /
+                        # exhausted retries, DESIGN.md §10): retryable —
+                        # 503 + Retry-After, never a permanent error
+                        self._json(503,
+                                   {"error": f"{type(e).__name__}: {e}"},
+                                   headers={"Retry-After":
+                                            str(RETRY_AFTER_S)})
+                        return
+                    if y is None:
+                        self._json(500, {"error": "prediction failed"})
+                        return
+                    out = {"predictions": y.tolist()}
+                    if quality < 1.0:     # degraded partial-ensemble result
+                        out["quality"] = quality
+                    self._json(200, out)
+                    return
                 elif self.path == "/predict":   # v1 compatibility shim
                     x = self._tokens(payload)
                     y = batcher.submit(x)

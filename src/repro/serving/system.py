@@ -40,10 +40,11 @@ from repro.serving.accumulator import PredictionAccumulator, RequestHandle
 from repro.serving.admission import AdmissionQueue
 from repro.serving.combiner import DeviceCombiner
 from repro.serving.metrics import StageTimers
-from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, FLUSH, FlushBarrier,
-                                    SHUTDOWN, DeadlineExceeded, Message,
-                                    PredictOptions, Request)
-from repro.serving.worker import Worker
+from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, FLUSH, OOM,
+                                    FlushBarrier, SHUTDOWN, DeadlineExceeded,
+                                    MemberUnavailable, Message, PredictOptions,
+                                    Request, RetriesExhausted)
+from repro.serving.worker import HEALTH_DEAD, Worker
 
 _COMBINE_RULES = ("mean", "weighted", "vote", "pallas")
 
@@ -65,7 +66,13 @@ class InferenceSystem:
                  max_wait_us: int = 500,
                  linger: str = "fixed",
                  fake_delay_us: int = 0,
-                 dispatch_ahead: Optional[int] = None):
+                 dispatch_ahead: Optional[int] = None,
+                 fault_plan=None,
+                 supervise: bool = False,
+                 watchdog_s: float = 5.0,
+                 supervise_interval_s: float = 0.05,
+                 retry_budget: int = 2,
+                 nan_guard: bool = False):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
@@ -93,6 +100,13 @@ class InferenceSystem:
         self.generation = 0              # bumped by each applied reconfig
         self.controller = None           # attached ReconfigController, if any
         self._profiler = None            # attached LiveBench sink, if any
+        # fault tolerance (DESIGN.md §10): opt-in — unsupervised systems
+        # keep the paper's §II.C.2 all-or-nothing sentinel semantics
+        self._fault_plan = fault_plan
+        self._nan_guard = nan_guard
+        self.watchdog_s = watchdog_s
+        self.retry_budget = retry_budget
+        self.supervisor = None
         classes = {c.vocab_size for c in self.cfgs}
         if len(classes) != 1:
             raise ValueError(f"ensemble members disagree on class count: {classes}")
@@ -129,6 +143,15 @@ class InferenceSystem:
         if not self.accumulator.all_ready.wait(ready_timeout):
             raise TimeoutError("workers failed to initialize")
         self._shutdown = False
+        if supervise:
+            # lazy import: control.supervisor imports worker health codes
+            from repro.serving.control.supervisor import Supervisor
+            self.supervisor = Supervisor(
+                self, watchdog_s=watchdog_s,
+                interval_s=supervise_interval_s, retry_budget=retry_budget)
+            for w in self.workers:       # contain crashes from the start
+                w.on_crash = self.supervisor.on_worker_crash
+            self.supervisor.start()
 
     # ---- live topology (online reconfiguration, DESIGN.md §8) ----------------
     def _make_worker(self, d: int, m: int, batch: int, *,
@@ -148,8 +171,11 @@ class InferenceSystem:
                    linger=self.linger, generation=generation,
                    profiler=self._profiler, oom_sentinel=oom_sentinel,
                    fake_delay_us=self._fake_delay_us,
-                   dispatch_ahead=self.dispatch_ahead)
+                   dispatch_ahead=self.dispatch_ahead,
+                   fault_plan=self._fault_plan, nan_guard=self._nan_guard)
         w.device_idx = d
+        if self.supervisor is not None:   # supervised containment for live
+            w.on_crash = self.supervisor.on_worker_crash   # spawns/respawns
         return w
 
     def spawn_instance(self, d: int, m: int, batch_size: int, *,
@@ -219,6 +245,109 @@ class InferenceSystem:
         if wait:
             w.join(timeout)
 
+    def quarantine_instance(self, w: Worker,
+                            retry_budget: Optional[int] = None) -> None:
+        """Contain a dead/stalled worker (DESIGN.md §10): remove it from
+        routing atomically, then recover every outstanding unit it owned —
+        its still-queued descriptors plus its in-flight ledger entries, a
+        unit being exactly one or the other.
+
+        With surviving data-parallel siblings the units are *resubmitted*
+        (combiner expectations move with them, same as a drain migration);
+        each affected request is charged one retry, and a request over its
+        ``retry_budget`` fails with :class:`RetriesExhausted` instead.
+
+        With no sibling (sole instance of the member) the units are
+        *forgiven*: a per-unit forgiveness message lets the accumulator
+        complete open requests with a degraded partial-ensemble combine,
+        and the controller (if any) is asked to respawn the member.  Only
+        when EVERY member has lost its last instance does the paper's
+        global {-1, None, None} sentinel fire — nothing is left to degrade
+        onto.
+
+        Unlike :meth:`drain_instance` the pipeline is presumed dead: no
+        SHUTDOWN is sent and no join is attempted — a stalled stage thread
+        is leaked as a daemon, and the in-flight ledger pop-gate makes any
+        late wakeup of it harmless (its completed contributions are
+        skipped, never double-posted).  Idempotent; safe from the
+        supervisor thread."""
+        from repro.serving.control.stealing import _transfer
+        budget = self.retry_budget if retry_budget is None else retry_budget
+        exhausted: List[int] = []
+        member_down = None
+        with self._submit_lock:
+            if self._shutdown:
+                return                    # shutdown owns teardown
+            inst = self._instances.get(w.model_idx, [])
+            if w not in inst:
+                return                    # already quarantined/drained
+            inst.remove(w)
+            self.workers.remove(w)
+            if not any(x.device_idx == w.device_idx for x in inst):
+                self.alloc.A[w.device_idx, w.model_idx] = 0
+            self.timers.inc("quarantines")
+            # the final health verdict persists in the gauge snapshot after
+            # the worker leaves the routing tables (serving_gauges only
+            # refreshes live workers)
+            self.timers.gauge(f"health.{w.worker_id}", HEALTH_DEAD)
+            # outstanding units: queued descriptors (never entered the
+            # pipeline) + in-flight ledger entries (admitted, not yet
+            # forwarded).  Popping a ledger key here CLAIMS the unit
+            # against the worker's own sender — dict.pop is GIL-atomic,
+            # so exactly one side wins (replay idempotency).
+            units = list(w.input_queue.drain_descriptors())
+            for key in list(w._ledger.keys()):
+                req = w._ledger.pop(key, None)
+                if req is not None:
+                    units.append((req, key[1]))
+            units = [(req, s) for req, s in units if not req.dropped()]
+            if inst:
+                # one retry charged per request per quarantine event (not
+                # per unit — losing a worker is one failure)
+                charged: Dict[int, Request] = {}
+                for req, _ in units:
+                    if req.rid not in charged:
+                        req.retries += 1
+                        charged[req.rid] = req
+                exhausted = [rid for rid, req in charged.items()
+                             if req.retries > budget]
+                dead_rids = set(exhausted)
+                replayed = 0
+                for req, s in units:
+                    if req.rid in dead_rids:
+                        continue          # fail() below tears down maps
+                    dst = inst[(s + req.rid) % len(inst)]
+                    _transfer(req, s, w, dst)
+                    dst.input_queue.put((req, s), req.priority)
+                    replayed += 1
+                if replayed:
+                    self.timers.inc("segments_replayed", replayed)
+            elif all(len(v) == 0 for v in self._instances.values()):
+                # last instance of the last member: nothing left to degrade
+                # onto — the paper's global sentinel applies (and it must be
+                # the ONLY message, or forgiveness would complete requests
+                # at quality 0 before the sentinel fails them)
+                self.prediction_queue.put(Message(OOM, None, None))
+            else:
+                member_down = (w.model_idx, w.device_idx, w.batch_size)
+                for req, s in units:
+                    if w.combiner is not None and \
+                            not w.combiner.unexpect(req, s):
+                        continue          # request already torn down
+                    # forgiveness message: P=None with s >= 0 — the
+                    # accumulator debits the member's rows for this
+                    # segment and tracks the missing weight for the
+                    # completion-time renormalization
+                    self.prediction_queue.put(Message(
+                        s, w.model_idx, None, rid=req.rid))
+        # outside the lock: fail() -> on_complete re-acquires _submit_lock
+        for rid in exhausted:
+            self.accumulator.fail(rid, RetriesExhausted(
+                f"request {rid} lost workers more than retry_budget="
+                f"{budget} times"))
+        if member_down is not None and self.controller is not None:
+            self.controller.note_member_down(*member_down)
+
     def set_profiler(self, profiler) -> None:
         """Attach a live-bench sink (``observe``/``note_request``); workers
         report per-batch latency and the broadcaster reports per-member
@@ -261,8 +390,12 @@ class InferenceSystem:
         with self._pool_lock:
             # a cancelled/expired request's buffer may still be read by a
             # batcher that hasn't popped its descriptors yet — never hand it
-            # to a later request (the versioned-buffer guarantee, §3)
-            if handle.error is None and \
+            # to a later request (the versioned-buffer guarantee, §3).  The
+            # same holds after a quarantine (retries > 0 / degraded rows): a
+            # stalled-but-alive quarantined worker may still read the buffer
+            # whenever its threads wake up
+            if handle.error is None and handle.req.retries == 0 and \
+                    handle.degraded_rows == 0 and \
                     len(self._buffer_pool) <= self.max_in_flight:
                 self._buffer_pool.append(handle.req.x)
         self._inflight.release()
@@ -340,6 +473,15 @@ class InferenceSystem:
                 # enqueued now would land behind SHUTDOWN and be discarded
                 # (the handle would hang until the client timeout)
                 raise RuntimeError("system is shut down")
+            dead = [m for m in members if not self._instances[m]]
+            if dead:
+                # a quarantined member with no respawn yet: fail fast with
+                # the retryable taxonomy (HTTP 503 + Retry-After) instead
+                # of dividing by zero in the striping below.  Checked
+                # before begin() so nothing registers in the accumulator.
+                raise MemberUnavailable(
+                    f"members {dead} have no live instance "
+                    f"(quarantined; respawn pending)")
             if self._profiler is not None:    # live per-member demand (§8)
                 self._profiler.note_request(members, n)
             rid = self._next_rid
@@ -463,7 +605,14 @@ class InferenceSystem:
     def serving_gauges(self) -> Dict[str, Dict[str, float]]:
         """Sampled gauges, keyed per worker (``queue_depth.<worker_id>``:
         that batcher's input-queue backlog at each drain) plus the rolling
-        ``hp_p50_ms`` high-priority median latency."""
+        ``hp_p50_ms`` high-priority median latency and each worker's
+        ``health.<worker_id>`` verdict (0=READY / 1=DEGRADED / 2=DEAD —
+        quarantined workers keep their final DEAD reading)."""
+        with self._submit_lock:
+            workers = list(self.workers)
+        for w in workers:                 # fresh verdicts for live workers
+            self.timers.gauge(f"health.{w.worker_id}",
+                              w.health(self.watchdog_s))
         return self.timers.gauge_snapshot()
 
     def latency_snapshot(self) -> Dict[str, Dict[str, float]]:
@@ -481,6 +630,8 @@ class InferenceSystem:
                 return
             self._shutdown = True
             workers = list(self.workers)
+        if self.supervisor is not None:
+            self.supervisor.stop()
         if self.controller is not None:
             self.controller.stop()
         for w in workers:

@@ -109,6 +109,7 @@ from repro.core.devices import DeviceSpec
 from repro.kernels.ops import pow2_clamp
 from repro.serving import segments as seg
 from repro.serving.admission import DispatchQueue, chunk_level
+from repro.serving.faults import FaultPlan
 from repro.serving.metrics import StageTimers
 from repro.serving.segments import (FLUSH, ChunkDesc, FlushBarrier, Message,
                                     Request, SHUTDOWN, SlotRef, Span)
@@ -121,6 +122,16 @@ DISPATCH_AHEAD = 16     # default outstanding async XLA dispatches (K):
                         # throughput-friendly — K bounds the committed
                         # (non-preemptible) window, so latency-sensitive
                         # mixed-traffic deployments set it small (1-2)
+
+# worker health states (exported via serving_gauges / GET /metrics)
+HEALTH_READY = 0        # all stage threads alive and making progress
+HEALTH_DEGRADED = 1     # a stage has been mid-work past the watchdog
+HEALTH_DEAD = 2         # a stage thread died (crashed event / not alive)
+# heartbeat states: a stage blocked on an empty queue is WAITing (healthy
+# at any age — idleness is not a stall); only an ACTIVE stamp going stale
+# means the stage is stuck mid-work
+_HB_WAIT = 0
+_HB_ACTIVE = 1
 
 
 def bucket_for(n: int, batch_size: int) -> int:
@@ -172,7 +183,9 @@ class Worker:
                  linger: str = "fixed", generation: int = 0,
                  profiler=None, oom_sentinel: bool = True,
                  fake_delay_us: int = 0,
-                 dispatch_ahead: int = DISPATCH_AHEAD):
+                 dispatch_ahead: int = DISPATCH_AHEAD,
+                 fault_plan: Optional[FaultPlan] = None,
+                 nan_guard: bool = False):
         self.worker_id = worker_id
         self.cfg = cfg
         self.batch_size = batch_size
@@ -214,6 +227,31 @@ class Worker:
         self._threads: List[threading.Thread] = []
         self._jax_device = device.jax_devices[0] if device.jax_devices else None
 
+        # ---- fault tolerance (DESIGN.md §10) ----
+        self._fault = fault_plan         # None on the default hot path
+        self.nan_guard = nan_guard
+        self._oom_sentinel = oom_sentinel
+        self.crashed = threading.Event()   # any stage thread died
+        self.crash_cause: Optional[BaseException] = None
+        # supervised containment hook: when set, _guarded reports the crash
+        # here instead of posting the paper's global {-1, None, None}
+        self.on_crash: Optional[Callable[["Worker", BaseException], None]] = None
+        # in-flight ledger: (rid, s) -> Request for every descriptor admitted
+        # by the batcher but not yet forwarded by the sender.  The sender
+        # pops an entry IMMEDIATELY BEFORE posting its completed
+        # contribution and skips the post when the pop misses — dict ops
+        # are GIL-atomic, so the pop is a perfect mutual-exclusion gate
+        # between the sender and a supervisor replaying this worker's
+        # in-flight units (replay idempotency; a late wakeup of a stalled
+        # quarantined stage can therefore never double-post).
+        self._ledger: Dict[tuple, Request] = {}
+        # per-stage heartbeats: stage -> [state, perf_counter stamp].  List
+        # mutation is GIL-atomic; no lock on the hot path.
+        now = time.perf_counter()
+        self._hb: Dict[str, list] = {s: [_HB_WAIT, now]
+                                     for s in ("batcher", "predictor",
+                                               "sender")}
+
         # preallocated input ring: each slot spans ceil(segment/batch)
         # compiled batches, so one queue hand-off moves a whole segment's
         # worth of coalesced rows through the pipeline (per-batch hand-offs
@@ -231,6 +269,8 @@ class Worker:
         self._alt_lock = threading.Lock()
 
         try:
+            if self._fault is not None:
+                self._fault.tick(worker_id, "spawn")
             if self._jax_device is not None:
                 params = jax.device_put(params, self._jax_device)
             self.params = params
@@ -265,18 +305,60 @@ class Worker:
 
     def _guarded(self, fn):
         """A stage thread dying mid-request would hang its request (and leak
-        its in-flight window slot) forever — convert runtime failures into
-        the paper's {-1, None, None} sentinel, which fails every in-flight
-        request and shuts the system down."""
+        its in-flight window slot) forever.  Under supervision (``on_crash``
+        set) the failure is *contained*: the supervisor quarantines this one
+        instance and replays its in-flight work on siblings (DESIGN.md §10).
+        Unsupervised, fall back to the paper's {-1, None, None} sentinel,
+        which fails every in-flight request and shuts the system down
+        (§II.C.2 all-or-nothing semantics, still the default)."""
         try:
             fn()
-        except BaseException:
-            self.prediction_queue.put(Message(seg.OOM, None, None))
+        except BaseException as e:
+            self.crash_cause = e
+            self.crashed.set()
+            hook = self.on_crash
+            if hook is not None:
+                try:
+                    hook(self, e)
+                except Exception:
+                    pass          # supervisor loop still sweeps on interval
+                return            # contained: no stderr traceback spam
+            if self._oom_sentinel:
+                self.prediction_queue.put(Message(seg.OOM, None, None))
             raise
 
-    def join(self, timeout: float = 30.0):
+    def join(self, timeout: float = 30.0) -> List[str]:
+        """Join all stage threads against ONE shared deadline (the seed gave
+        each thread the full budget — a 3-stage hang took 3x the timeout)
+        and report which stages failed to stop instead of silently
+        returning; stuck daemons are leaked deliberately (a stalled XLA call
+        cannot be interrupted), the caller just must know routing-wise the
+        worker is gone but its threads may still wake up later."""
+        deadline = time.perf_counter() + timeout
+        stuck = []
         for t in self._threads:
-            t.join(timeout)
+            t.join(max(0.0, deadline - time.perf_counter()))
+            if t.is_alive():
+                stuck.append(t.name)
+        if stuck:
+            self.timers.inc("join_timeouts", len(stuck))
+        return stuck
+
+    def health(self, watchdog_s: float = 5.0) -> int:
+        """Liveness verdict for the supervisor: DEAD when a stage thread
+        crashed or exited; DEGRADED when a stage has been ACTIVE (mid-work,
+        not blocked on an empty queue) longer than ``watchdog_s``; READY
+        otherwise.  WAIT-state stamps never age into DEGRADED — an idle
+        worker is healthy."""
+        if self.crashed.is_set():
+            return HEALTH_DEAD
+        if self._threads and not all(t.is_alive() for t in self._threads):
+            return HEALTH_DEAD
+        now = time.perf_counter()
+        for state, stamp in self._hb.values():
+            if state == _HB_ACTIVE and now - stamp > watchdog_s:
+                return HEALTH_DEGRADED
+        return HEALTH_READY
 
     # ---- batch slots ---------------------------------------------------------
     def _effective_linger(self) -> float:
@@ -390,8 +472,10 @@ class Worker:
 
     def _batcher(self):
         open_batch: Optional[_OpenBatch] = None
+        hb = self._hb["batcher"]
         while True:
             t0 = time.perf_counter()
+            hb[:] = [_HB_WAIT, t0]
             if open_batch is None:
                 item = self.input_queue.get()
             else:
@@ -404,11 +488,13 @@ class Worker:
                         item = self.input_queue.get_nowait()
                 except queue.Empty:
                     t0 = self.timers.timed("batcher_wait", t0)
+                    hb[:] = [_HB_ACTIVE, t0]
                     self._flush(open_batch)   # linger expired
                     open_batch = None
                     self.timers.timed("batch_fill", t0)
                     continue
             t0 = self.timers.timed("batcher_wait", t0)
+            hb[:] = [_HB_ACTIVE, t0]
             self.timers.gauge(self._depth_gauge, self.input_queue.qsize())
             if item == SHUTDOWN:
                 if open_batch is not None:
@@ -454,6 +540,15 @@ class Worker:
             self.prediction_queue.put(Message(
                 seg.DROPPED, None, None, rid=req.rid))
             return open_batch
+        # in-flight ledger entry BEFORE any rows are packed: from here the
+        # descriptor is this worker's responsibility until the sender (or a
+        # replaying supervisor) pops it — the one-statement gap between the
+        # admission-queue pop and this add is the only window where a crash
+        # loses the unit (hang, bounded by the client deadline, not silent
+        # corruption)
+        self._ledger[(req.rid, s)] = req
+        if self._fault is not None:
+            self._fault.tick(self.worker_id, "batcher")
         express = req.priority == seg.PRIORITY_HIGH
         lo, hi = req.bounds(s)
         width = req.x.shape[1]
@@ -535,12 +630,15 @@ class Worker:
             # round — per-chunk lock rounds would pay a contended lock +
             # thread wakeup per chunk with identical commitment semantics,
             # since the token count is what bounds the committed window
+            hb = self._hb["predictor"]
+            hb[:] = [_HB_WAIT, time.perf_counter()]
             self._dispatch_sem.acquire()
             tokens = 1
             while tokens < self.dispatch_ahead and \
                     self._dispatch_sem.acquire(blocking=False):
                 tokens += 1
             items = self._dispatch_q.get_batch(tokens)
+            hb[:] = [_HB_ACTIVE, time.perf_counter()]
             group: List[tuple] = []
             committed = 0
             stop = False
@@ -565,7 +663,17 @@ class Worker:
                     continue
                 committed += 1
                 y = None
-                if self.fake:
+                nan_out = False
+                if self._fault is not None:
+                    nan_out = self._fault.tick(
+                        self.worker_id, "predictor") == "nan"
+                if nan_out:
+                    # poisoned device output: bypasses the real dispatch so
+                    # it works identically on fake and real devices; the
+                    # sender's nan_guard is what must catch it
+                    y = np.full((chunk.bucket, self.num_classes),
+                                np.nan, np.float32)
+                elif self.fake:
                     if self.fake_delay_us:    # simulated device time
                         time.sleep(self.fake_delay_us * 1e-6)
                 else:
@@ -608,11 +716,14 @@ class Worker:
         resolution message."""
         on_device = self.combiner is not None
         staging: Dict[tuple, list] = {}     # (rid, s) -> [rows, {seg_off: P}]
+        hb = self._hb["sender"]
         while True:
+            hb[:] = [_HB_WAIT, time.perf_counter()]
             batch = self._send_q.get()
             if batch is None:
                 return
             t0 = time.perf_counter()
+            hb[:] = [_HB_ACTIVE, t0]
             profiled = []                  # (bucket, valid) materialized
             for chunk, y, t_dispatch, skipped in batch:
                 self._send_chunk(chunk, y, skipped, staging, on_device,
@@ -632,11 +743,23 @@ class Worker:
 
     def _send_chunk(self, chunk, y, skipped, staging, on_device, profiled):
         if not skipped:
+            if self._fault is not None:
+                self._fault.tick(self.worker_id, "sender")
             if y is not None:
                 if on_device:
-                    y.block_until_ready()  # compute done; stays on device
+                    if isinstance(y, np.ndarray):    # injected NaN output
+                        pass
+                    else:
+                        y.block_until_ready()  # compute done; stays on device
                 else:
                     y = np.asarray(y)      # d->h sync
+                if self.nan_guard and isinstance(y, np.ndarray) \
+                        and np.isnan(y).any():
+                    # poisoned output: dying here (WorkerCrashed through
+                    # _guarded) routes recovery through quarantine + replay
+                    # on a sibling rather than folding NaN into Y
+                    raise seg.WorkerCrashed(
+                        f"{self.worker_id}: NaN in device output")
             self._dispatch_sem.release()   # window slot free again
             if self.profiler is not None and (y is not None
                                               or self.fake_delay_us):
@@ -653,6 +776,7 @@ class Worker:
                 # runs this branch too, so no entry can leak) and post
                 # the idempotent DROPPED resolution
                 staging.pop(key, None)
+                self._ledger.pop(key, None)
                 self.timers.inc("rows_dropped", sp.n)
                 if sp.req.rid not in dropped_rids:
                     dropped_rids.add(sp.req.rid)
@@ -669,6 +793,17 @@ class Worker:
             if st[0] < hi - lo:
                 continue                   # segment still in flight
             del staging[key]
+            # pop-gate (DESIGN.md §10): claim the in-flight ledger entry
+            # IMMEDIATELY before forwarding.  dict.pop is GIL-atomic, so
+            # exactly one of {this sender, a supervisor replaying this
+            # worker} wins the entry — a miss means the unit was already
+            # resubmitted to a sibling (this worker was quarantined, e.g.
+            # a stalled stage waking up late) and forwarding it again
+            # would double-count rows into Y.  Popping BEFORE the post
+            # (not after) means a crash inside the post window hangs the
+            # unit (bounded by deadline / retry) instead of corrupting Y.
+            if self._ledger.pop(key, None) is None:
+                continue
             if y is None and not st[1]:    # fake predictor: instant zeros
                 P = np.zeros((hi - lo, self.num_classes), np.float32)
             else:

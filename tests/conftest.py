@@ -8,3 +8,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    # no pytest.ini/pyproject in this repo; register the chaos marker here
+    # so `-m chaos` selects the fault-injection suite without warnings
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection / recovery tests on simulated devices")
