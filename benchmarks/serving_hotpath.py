@@ -40,6 +40,20 @@ transfers, combination.  Scenarios:
                     the fast sibling idles.  Runs the identical trace with
                     the work-stealing fast path off vs on and reports the
                     throughput ratio;
+  * ``overload_brownout``  the overload workload (ISSUE 7, DESIGN.md §11):
+                    a cheap and a heavy member on simulated device time,
+                    requests paced at ~3x the heavy member's service rate.
+                    Runs the identical trace twice — plain system (queues
+                    grow without bound, every request waits behind the
+                    heavy backlog) vs the brownout controller + admission
+                    byte budget (pressure crosses the hysteresis band,
+                    in-flight requests are demoted to the cheap tier and
+                    new ones planned against it; anything past the budget
+                    is shed with a *typed* ``Overloaded`` + Retry-After).
+                    Reports ``completed_or_shed_ratio`` (every request
+                    either resolves with a quality-stamped result or a
+                    typed rejection — nothing hangs or dies untyped) and
+                    ``brownout_p99_improvement`` (normal-class p99 off/on);
   * ``fault_recovery``  the chaos workload (ISSUE 6, DESIGN.md §10): two
                     data-parallel siblings of a hot member on simulated
                     device time, a ``FaultPlan`` killing one sibling's
@@ -64,6 +78,11 @@ Acceptance (ISSUE 6): killing one sibling mid-trace loses zero requests
 (``fault_recovery.completed_ratio`` == 1.0 at full quality) and recovery
 lands within a second (``fault_recovery.recovery_ok`` == 1.0), both gated
 by check_regression.py.
+Acceptance (ISSUE 7): under 3x saturation every request completes or is
+typed-rejected (``overload_brownout.completed_or_shed_ratio`` == 1.0) and
+brownout improves normal-class p99 >= 2x over the uncontrolled run
+(``overload_brownout.brownout_p99_improvement``), both gated by
+check_regression.py.
 """
 from __future__ import annotations
 
@@ -331,11 +350,86 @@ def _measure_fault_recovery(cfgs, params, seq: int, requests: int,
     }
 
 
+def _measure_overload_brownout(cfgs, params, seq: int, requests: int,
+                               pace_s: float, cheap_delay_us: int,
+                               heavy_delay_us: int, brownout: bool) -> dict:
+    """One overload pass (ISSUE 7): member 0 cheap, member 1 heavy (each on
+    its own simulated device), requests paced at ~3x the heavy member's
+    service rate.  With ``brownout`` a :class:`BrownoutController` (explicit
+    two-level tier table: full ensemble, then the cheap member alone) and an
+    admission byte budget are attached; without, the plain system queues
+    without bound.  Per-request latency comes from the system's own
+    normal-class snapshot, so both passes measure identically."""
+    from repro.serving.admission import AdmissionBudget
+    from repro.serving.segments import Overloaded
+    from repro.serving.system import InferenceSystem
+
+    seg_sz = 64
+    devs = host_cpus(2, memory_bytes=8 * GiB)
+    A = np.array([[seg_sz, 0], [0, seg_sz]])
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    srng = np.random.default_rng(7)
+    Xs = [srng.integers(0, 512, (seg_sz, seq)).astype(np.int32)
+          for _ in range(requests)]
+    budget = (AdmissionBudget(max_bytes=40 * seg_sz * seq * 4)
+              if brownout else None)
+    with InferenceSystem(cfgs, params, alloc, segment_size=seg_sz,
+                         max_seq=seq, fake=True,
+                         fake_delay_us=cheap_delay_us,
+                         max_in_flight=requests,
+                         admission_budget=budget) as system:
+        for w in system.instances(1):      # heterogeneous member costs
+            w.fake_delay_us = heavy_delay_us
+        ctl = None
+        if brownout:
+            from repro.serving.control import BrownoutController
+            ctl = BrownoutController(
+                system, tiers=[(0, 1), (0,)], high=1.0, low=0.2,
+                up_ticks=2, down_ticks=1000, interval_s=0.002,
+                depth_ref=8.0).start()
+        handles, shed = [], 0
+        t0 = time.perf_counter()
+        for x in Xs:
+            try:
+                handles.append(system.predict_async(x))
+            except Overloaded:
+                shed += 1                   # typed, fail-fast, retryable
+            time.sleep(pace_s)
+        completed = 0
+        qualities = []
+        for h in handles:
+            y = h.result(600.0)             # raises on any lost request
+            if y.shape[0] == seg_sz:
+                completed += 1
+                qualities.append(float(h.quality))
+        dt = time.perf_counter() - t0
+        lat = system.latency_snapshot().get("normal", {})
+        counters = system.serving_counters()
+        out = {
+            "requests": requests,
+            "seconds": dt,
+            "completed": completed,
+            "shed": shed,
+            "completed_or_shed_ratio": (completed + shed) / requests,
+            "p50_ms": lat.get("p50_ms", 0.0),
+            "p99_ms": lat.get("p99_ms", 0.0),
+            "mean_quality": (float(np.mean(qualities))
+                             if qualities else 0.0),
+            "requests_demoted": counters.get("requests_demoted", 0),
+            "admission_rejections": counters.get("admission_rejections", 0),
+            "brownout_level": ctl.level if ctl is not None else 0,
+            "brownout_transitions": ctl.transitions if ctl is not None else 0,
+        }
+    return out
+
+
 def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
         small_concurrency=48, small_rounds=8, small_max_wait_us=2000,
         mixed_rounds=3, mixed_smalls=8, mixed_bulk=1024,
         skew_requests=40, skew_delay_us=4000,
-        fault_requests=32, fault_delay_us=4000):
+        fault_requests=32, fault_delay_us=4000,
+        overload_requests=120, overload_pace_s=0.00133,
+        overload_cheap_us=400, overload_heavy_us=4000):
     import jax
     import repro.models as M
     from repro.serving.system import InferenceSystem
@@ -429,6 +523,19 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
     results["fault_recovery"] = _measure_fault_recovery(
         small_cfgs, small_params, seq, fault_requests, fault_delay_us)
 
+    # ---- overload_brownout: 3x saturation, brownout off vs on (ISSUE 7) -----
+    overload = {}
+    for mode, on in (("off", False), ("on", True)):
+        overload[mode] = _measure_overload_brownout(
+            small_cfgs, small_params, seq, overload_requests,
+            overload_pace_s, overload_cheap_us, overload_heavy_us,
+            brownout=on)
+    overload["completed_or_shed_ratio"] = \
+        overload["on"]["completed_or_shed_ratio"]
+    overload["brownout_p99_improvement"] = (
+        overload["off"]["p99_ms"] / max(overload["on"]["p99_ms"], 1e-9))
+    results["overload_brownout"] = overload
+
     if csv:
         print("serving_hotpath:variant,segments_per_sec,messages_per_request")
         for name in ("seed", "pipelined", "coalesced"):
@@ -471,6 +578,16 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
               f"{fr['completed_ratio']:.3f},{fr['segments_replayed']}")
         print(f"serving_hotpath:fault_recovery.recovery_s,"
               f"{fr['recovery_s']:.4f},{fr['recovery_ok']:.0f}")
+        for mode in ("off", "on"):
+            r = overload[mode]
+            print(f"serving_hotpath:overload_brownout.{mode}.p50/p99_ms,"
+                  f"{r['p50_ms']:.1f},{r['p99_ms']:.1f}")
+            print(f"serving_hotpath:overload_brownout.{mode}.completed/shed,"
+                  f"{r['completed']},{r['shed']}")
+        print(f"serving_hotpath:overload_brownout.completed_or_shed_ratio,"
+              f"{overload['completed_or_shed_ratio']:.3f},")
+        print(f"serving_hotpath:overload_brownout.brownout_p99_improvement,"
+              f"{overload['brownout_p99_improvement']:.2f},")
         for name in ("pipelined", "coalesced"):
             for stage, t in results[name]["stage_timings"].items():
                 print(f"serving_hotpath:{name}.{stage},"

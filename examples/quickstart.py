@@ -101,6 +101,28 @@ def main():
               f"segments_replayed={c.get('segments_replayed', 0):.0f}")
         print("all requests served at quality:", [q for _, q in quals])
 
+    # 5. overload brownout (DESIGN.md §11): when offered load outruns
+    #    capacity, the BrownoutController degrades *quality* instead of
+    #    latency — it folds queue depth / p99 / loss counters into one
+    #    pressure signal and, through hysteresis, serves cheaper member
+    #    subsets (accuracy-elastic tiers).  Drive the control law by hand:
+    from repro.serving import BrownoutController
+    with InferenceSystem(cfgs, params, alloc, segment_size=32,
+                         max_seq=SEQ) as system:
+        ctl = BrownoutController(system, tiers=[(0, 1), (0,)],
+                                 demote_inflight=False, feasibility=False)
+        ctl.step(2.0)
+        ctl.step(2.0)               # two high-pressure ticks: level 1
+        h = system.predict_async(X)         # planned against the cheap tier
+        Y_tier = h.result(60.0)
+        print(f"\nbrownout drill: level={ctl.level} "
+              f"tier quality={h.quality:.2f} "
+              f"(served {Y_tier.shape[0]} rows on the cheap member)")
+        for _ in range(10):
+            ctl.step(0.0)           # sustained calm: back to level 0
+        print(f"recovered to level {ctl.level}; "
+              f"stats={ {k: v for k, v in ctl.stats().items() if k != 'tiers'} }")
+
     # Going further: the allocation above is frozen at deploy time.  When
     # the live workload drifts (one member runs hot, traffic spikes), attach
     # the online reconfiguration controller — live replanning + instance
@@ -113,6 +135,11 @@ def main():
     # drills, e.g.:
     #     python -m repro.launch.serve \
     #         --fault stage=predictor,after=100,worker=w0.0
+    # Overload robustness (DESIGN.md §11) adds --brownout, --tier-table,
+    # --cascade-margin and --admission-budget-mib; a sustained-overload
+    # drill slows one member and watches the 'brownout' block in /metrics:
+    #     python -m repro.launch.serve --brownout --admission-budget-mib 64 \
+    #         --fault stage=predictor,kind=slow,stall_s=0.004,worker=w1
 
 
 if __name__ == "__main__":

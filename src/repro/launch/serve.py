@@ -71,9 +71,36 @@ def main(argv=None):
                     help="inject a deterministic fault for chaos testing; "
                          "repeatable.  SPEC is key=value pairs: "
                          "stage=batcher|predictor|sender|spawn "
-                         "[kind=raise|stall|nan] [after=N] [stall_s=S] "
-                         "[worker=ID-prefix], e.g. "
-                         "--fault stage=predictor,after=100,worker=w0.0")
+                         "[kind=raise|stall|nan|slow] [after=N] [stall_s=S] "
+                         "[repeat=true] [worker=ID-prefix], e.g. "
+                         "--fault stage=predictor,after=100,worker=w0.0 or "
+                         "a sustained overload drill: "
+                         "--fault stage=predictor,kind=slow,stall_s=0.004")
+    # overload robustness (DESIGN.md §11)
+    ap.add_argument("--brownout", action="store_true",
+                    help="run the brownout controller: continuous pressure "
+                         "signal from queue depths / p99 / loss counters, "
+                         "hysteresis into discrete levels, each serving a "
+                         "cheaper member-subset quality tier; plus cost-"
+                         "aware admission (429 + computed Retry-After on "
+                         "infeasible deadlines)")
+    ap.add_argument("--tier-table", default=None,
+                    help="explicit brownout tiers as semicolon-separated "
+                         "member-id lists, level 0 first, e.g. "
+                         "'0,1,2;0,1;0'; default derives tiers from "
+                         "per-member cost/weight ratios (EARN-style)")
+    ap.add_argument("--brownout-deadline-ms", type=float, default=None,
+                    help="latency budget the pressure signal compares the "
+                         "normal-class p99 against (default: none — queue "
+                         "depth and loss counters drive pressure)")
+    ap.add_argument("--cascade-margin", type=float, default=None,
+                    help="confidence-gated cascade: tier results whose "
+                         "top1-top2 margin falls below this escalate to the "
+                         "dropped members (with --brownout)")
+    ap.add_argument("--admission-budget-mib", type=float, default=0.0,
+                    help="global in-flight input-byte budget; requests "
+                         "beyond it are refused with 429 + Retry-After "
+                         "instead of queuing unboundedly (0 disables)")
     args = ap.parse_args(argv)
 
     import jax
@@ -124,6 +151,11 @@ def main(argv=None):
         from repro.serving.faults import FaultPlan, FaultSpec
         fault_plan = FaultPlan(*[FaultSpec.parse(s) for s in args.fault])
         print(f"fault injection armed: {args.fault}")
+    budget = None
+    if args.admission_budget_mib:
+        from repro.serving.admission import AdmissionBudget
+        budget = AdmissionBudget(
+            max_bytes=int(args.admission_budget_mib * 1024 ** 2))
     system = InferenceSystem(cfgs, params, res.matrix,
                              segment_size=args.segment_size,
                              max_seq=args.seq, combine=args.combine,
@@ -134,7 +166,8 @@ def main(argv=None):
                              watchdog_s=args.watchdog_s,
                              retry_budget=args.retry_budget,
                              nan_guard=args.nan_guard,
-                             fault_plan=fault_plan)
+                             fault_plan=fault_plan,
+                             admission_budget=budget)
     if not args.no_supervise:
         print(f"supervision on (watchdog {args.watchdog_s:.1f}s, retry "
               f"budget {args.retry_budget}); worker failures quarantine the "
@@ -150,6 +183,22 @@ def main(argv=None):
               f"{args.reconfig_interval:.1f}s, steal "
               f"{'off' if args.no_steal else 'on'}; see GET /metrics "
               f"'controller')")
+    brownout = None
+    if args.brownout:
+        from repro.serving.control import BrownoutController
+        tiers = None
+        if args.tier_table:
+            tiers = [tuple(int(m) for m in level.split(","))
+                     for level in args.tier_table.split(";") if level.strip()]
+        brownout = BrownoutController(
+            system, tiers=tiers,
+            deadline_budget_ms=args.brownout_deadline_ms,
+            cascade_margin=args.cascade_margin).start()
+        print(f"brownout controller on ({len(brownout.tiers())} quality "
+              f"tiers; see GET /metrics 'brownout')")
+    if budget is not None:
+        print(f"admission budget: {args.admission_budget_mib:.1f} MiB "
+              f"in-flight input bytes (429 + Retry-After beyond it)")
     cache = PredictionCache(args.cache_capacity) if args.cache_capacity else None
     httpd, batcher = serve(system, port=args.port, cache=cache)
     print(f"serving {len(cfgs)} models / {len(system.workers)} workers on "

@@ -2,7 +2,8 @@
 worker pool, prediction accumulator, the EnsembleClient request facade and
 the HTTP wrapper."""
 from repro.serving.accumulator import PredictionAccumulator, RequestHandle
-from repro.serving.admission import AdmissionQueue, DispatchQueue, chunk_level
+from repro.serving.admission import (AdmissionBudget, AdmissionQueue,
+                                     DispatchQueue, chunk_level)
 from repro.serving.client import ClientHandle, EnsembleClient
 from repro.serving.combiner import DeviceCombiner
 from repro.serving.faults import FaultPlan, FaultSpec, InjectedFault
@@ -11,14 +12,15 @@ from repro.serving.request_cache import PredictionCache
 from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, PRIORITY_HIGH,
                                     PRIORITY_NORMAL, ChunkDesc,
                                     DeadlineExceeded, MemberUnavailable,
-                                    Message, PredictOptions, Request,
-                                    RequestCancelled, RetriesExhausted,
-                                    ServingUnavailable, SlotRef,
-                                    WorkerCrashed)
+                                    Message, Overloaded, PredictOptions,
+                                    Request, RequestCancelled,
+                                    RetriesExhausted, ServingUnavailable,
+                                    SlotRef, WorkerCrashed)
 from repro.serving.server import AdaptiveBatcher, serve
 from repro.serving.system import InferenceSystem
 from repro.serving.worker import Worker, bucket_for, make_predict_fn
-from repro.serving.control import LiveBench, ReconfigController, Supervisor
+from repro.serving.control import (BrownoutController, LiveBench,
+                                   ReconfigController, Supervisor)
 
 __all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
            "Message", "Request", "RequestHandle", "PredictionAccumulator",
@@ -30,4 +32,5 @@ __all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
            "PRIORITY_NORMAL", "LiveBench", "ReconfigController",
            "FaultPlan", "FaultSpec", "InjectedFault", "Supervisor",
            "ServingUnavailable", "WorkerCrashed", "MemberUnavailable",
-           "RetriesExhausted"]
+           "RetriesExhausted", "Overloaded", "AdmissionBudget",
+           "BrownoutController"]

@@ -78,6 +78,10 @@ class RequestHandle:
         # rows renormalize over the members that did report.
         self.quality = 1.0
         self.degraded_rows = 0
+        # brownout cascade (DESIGN.md §11): the system must not recycle the
+        # request's input buffer at completion — a low-margin result may
+        # resubmit the same rows to the escalation members
+        self.keep_buffer = False
         self._missing_w: Optional[np.ndarray] = None
         self.on_segment = on_segment          # streaming-partials callback
         self._seg_buffers: Dict[int, Dict[int, np.ndarray]] = {}
@@ -171,6 +175,9 @@ class PredictionAccumulator:
             if error is not None:
                 handle.error = error
             self._requests.pop(handle.req.rid, None)
+        if isinstance(error, DeadlineExceeded):
+            # deadline-miss rate feeds the brownout pressure signal (§11)
+            self.timers.inc("deadline_misses")
         if error is None and handle.req.t_submit is not None:
             # per-class end-to-end latency (the hp_p50 SLO view, §7)
             self.timers.latency(
@@ -298,7 +305,12 @@ class PredictionAccumulator:
                 denom = np.maximum(1.0 - mw[:req.n][mask], 1e-12)
                 handle.Y[mask] /= denom[:, None]
             total = req.n * len(req.members)
-            handle.quality = 1.0 - handle.degraded_rows / max(total, 1)
+            # multiply, don't assign: a brownout-tier request enters with
+            # quality = its tier's served weight fraction (< 1.0), and
+            # mid-flight degradation/demotion compounds onto it.  For the
+            # common full-quality entry (1.0 * x) this is bit-identical to
+            # the old assignment.
+            handle.quality *= 1.0 - handle.degraded_rows / max(total, 1)
             self.timers.inc("degraded_requests")
         self._finish(handle)
 

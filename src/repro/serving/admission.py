@@ -50,6 +50,61 @@ def chunk_level(spans: Sequence[Span]) -> int:
     return level
 
 
+class AdmissionBudget:
+    """Bounded global byte/row budget for admitted-but-unfinished work
+    (DESIGN.md §11 backpressure).
+
+    The admission queues themselves stay unbounded (sentinels and control
+    items must never block), but the *request payloads* feeding them are
+    charged here at admission and credited back at completion, so queue
+    memory cannot grow without bound under sustained overload: once the
+    budget is exhausted new requests fail fast with
+    :class:`~repro.serving.segments.Overloaded` (HTTP 429) instead of
+    piling onto a queue they would only time out in.  ``rows`` counts
+    request rows x planned members — the same unit the accumulator debits —
+    so the row budget bounds pipeline work, while the byte budget bounds
+    input-buffer memory."""
+
+    def __init__(self, max_bytes: Optional[int] = None,
+                 max_rows: Optional[int] = None):
+        self.max_bytes = max_bytes
+        self.max_rows = max_rows
+        self._lock = threading.Lock()
+        self.bytes_used = 0
+        self.rows_used = 0
+        self.rejected = 0
+
+    def try_charge(self, nbytes: int, rows: int) -> bool:
+        """Atomically charge, or refuse without side effects.  A single
+        request larger than the whole budget is still admitted when the
+        budget is idle (otherwise it could never run)."""
+        with self._lock:
+            idle = self.bytes_used == 0 and self.rows_used == 0
+            over_b = self.max_bytes is not None and \
+                self.bytes_used + nbytes > self.max_bytes
+            over_r = self.max_rows is not None and \
+                self.rows_used + rows > self.max_rows
+            if (over_b or over_r) and not idle:
+                self.rejected += 1
+                return False
+            self.bytes_used += nbytes
+            self.rows_used += rows
+            return True
+
+    def credit(self, nbytes: int, rows: int) -> None:
+        with self._lock:
+            self.bytes_used = max(0, self.bytes_used - nbytes)
+            self.rows_used = max(0, self.rows_used - rows)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"bytes_used": self.bytes_used,
+                    "rows_used": self.rows_used,
+                    "max_bytes": self.max_bytes,
+                    "max_rows": self.max_rows,
+                    "rejected": self.rejected}
+
+
 class AdmissionQueue:
     """Unbounded two-level MPSC queue with ``queue.Queue``-style blocking."""
 

@@ -33,8 +33,18 @@ import numpy as np
 
 from repro.serving.request_cache import PredictionCache
 from repro.serving.segments import (DeadlineExceeded, MemberUnavailable,
-                                    PredictOptions, RequestCancelled,
-                                    priority_level, PRIORITY_HIGH)
+                                    Overloaded, PredictOptions,
+                                    RequestCancelled, priority_level,
+                                    PRIORITY_HIGH)
+
+
+def quality_salt(salt: bytes, quality: float) -> bytes:
+    """Cache salt for a degraded/brownout result (DESIGN.md §11): a
+    quality < 1.0 prediction must never be stored under — or served for —
+    a full-quality key, so the served tier partitions the key space."""
+    if quality >= 1.0:
+        return salt
+    return salt + f"|q={quality:.6f}".encode()
 
 
 class ClientHandle:
@@ -65,7 +75,11 @@ class ClientHandle:
             return self._Y
         Y_miss = self._inner.result(timeout)
         if self._cache is not None:
-            self._cache.insert(self._X_miss, Y_miss, self._cache_salt)
+            # quality-salted insert: a degraded partial-ensemble result
+            # would otherwise poison the full-quality key and be replayed
+            # at quality 1.0 long after the brownout ends
+            self._cache.insert(self._X_miss, Y_miss,
+                               quality_salt(self._cache_salt, self.quality()))
         if self._cached is None:       # nothing served from cache
             self._Y = Y_miss
         else:
@@ -86,13 +100,39 @@ class ClientHandle:
         return self._inner.done.is_set()
 
     def quality(self) -> float:
-        """Fraction of member-rows actually served (DESIGN.md §10): 1.0 =
-        full ensemble; < 1.0 means the result is a degraded partial combine
-        (a member lost its last instance mid-request).  Cached rows were
-        full-quality when inserted."""
+        """Fraction of the ensemble actually served (DESIGN.md §§10-11):
+        1.0 = full ensemble; < 1.0 means a degraded partial combine (a
+        member lost its last instance mid-request) or a brownout tier.
+        Rows served from the cache under the base salt were full-quality
+        when inserted (degraded results are quality-salted)."""
         if self._inner is None:
             return 1.0
         return getattr(self._inner, "quality", 1.0)
+
+    def retry_after_s(self) -> Optional[float]:
+        """Suggested backoff when the request was refused (429
+        ``Overloaded``) or capacity was transiently unavailable (503) —
+        the server's drain-estimate value, surfaced from the typed error.
+        None when the request was not refused or has not resolved yet."""
+        err = self._error
+        if err is None and self._inner is not None:
+            err = getattr(self._inner, "error", None)
+            if err is None:
+                err = getattr(self._inner, "_error", None)
+        return getattr(err, "retry_after_s", None)
+
+
+def _retry_after_of(e, detail: str) -> Optional[float]:
+    """The server's suggested backoff: the exact float from the JSON body
+    when present, else the integer-seconds ``Retry-After`` header."""
+    try:
+        return float(json.loads(detail).get("retry_after_s"))
+    except (TypeError, ValueError):
+        pass
+    try:
+        return float(e.headers.get("Retry-After"))
+    except (TypeError, ValueError):
+        return None
 
 
 class _HttpFuture:
@@ -242,10 +282,19 @@ class EnsembleClient:
             detail = e.read().decode(errors="replace")
             if e.code == 504:
                 raise DeadlineExceeded(detail) from None
+            if e.code == 429:
+                # refused at admission (DESIGN.md §11): typed + the
+                # server's drain-estimate backoff, so callers can shed or
+                # retry elsewhere immediately
+                raise Overloaded(
+                    detail, retry_after_s=_retry_after_of(e, detail)) \
+                    from None
             if e.code == 503:
                 # transient capacity failure (DESIGN.md §10): the server
                 # set Retry-After — the request is retryable, not broken
-                raise MemberUnavailable(detail) from None
+                err = MemberUnavailable(detail)
+                err.retry_after_s = _retry_after_of(e, detail)
+                raise err from None
             raise RuntimeError(f"/v2/predict failed ({e.code}): {detail}") \
                 from None
         return (np.asarray(r["predictions"], np.float32),

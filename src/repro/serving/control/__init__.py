@@ -16,11 +16,17 @@ the live serving hot path.
 * :class:`Supervisor` — per-worker heartbeat/liveness sweep that contains
   instance failures (quarantine + chunk replay / graceful degradation,
   DESIGN.md §10) instead of the paper's all-or-nothing sentinel.
+* :class:`BrownoutController` — overload robustness (DESIGN.md §11):
+  pressure-driven quality tiers with hysteresis, cost-aware admission with
+  computed Retry-After, mid-flight demotion and confidence-gated cascade.
 """
 from repro.serving.control.controller import ReconfigController
 from repro.serving.control.livebench import LiveBench
+from repro.serving.control.overload import (BrownoutController, CascadeHandle,
+                                            build_tier_table, estimate_drain_s)
 from repro.serving.control.stealing import balance_member, steal_from
 from repro.serving.control.supervisor import Supervisor
 
 __all__ = ["ReconfigController", "LiveBench", "balance_member", "steal_from",
-           "Supervisor"]
+           "Supervisor", "BrownoutController", "CascadeHandle",
+           "build_tier_table", "estimate_drain_s"]

@@ -24,10 +24,14 @@ pipeline position every run:
 Kinds: ``raise`` (the stage thread dies with :class:`InjectedFault`),
 ``stall`` (the stage sleeps ``stall_s`` — past the supervisor watchdog the
 worker is quarantined while the thread is still alive, exercising the
-late-wakeup idempotency protocol), ``nan`` (predictor only).
+late-wakeup idempotency protocol), ``nan`` (predictor only), ``slow``
+(the stage sleeps ``stall_s`` but the spec stays armed with ``repeat=True``
+— sustained slowdown, the overload/brownout drill in DESIGN.md §11, as
+opposed to ``stall``'s one-shot hang).
 
-Each spec fires **once**; counters are per (worker, stage), so one plan can
-be shared by a whole system and scoped with ``worker=`` prefixes.
+Each spec fires **once** unless ``repeat=True``; counters are per
+(worker, stage), so one plan can be shared by a whole system and scoped
+with ``worker=`` prefixes.
 """
 from __future__ import annotations
 
@@ -37,7 +41,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 _STAGES = ("batcher", "predictor", "sender", "spawn")
-_KINDS = ("raise", "stall", "nan")
+_KINDS = ("raise", "stall", "nan", "slow")
 
 
 class InjectedFault(RuntimeError):
@@ -53,8 +57,9 @@ class FaultSpec:
     stage: str
     kind: str = "raise"
     after: int = 0              # units through the stage before firing
-    stall_s: float = 30.0       # kind="stall": simulated hang duration
+    stall_s: float = 30.0       # kind="stall"/"slow": simulated hang/delay
     worker: Optional[str] = None
+    repeat: bool = False        # stay armed after firing (sustained faults)
 
     def __post_init__(self):
         if self.stage not in _STAGES:
@@ -65,6 +70,8 @@ class FaultSpec:
                              f"(expected one of {_KINDS})")
         if self.kind == "nan" and self.stage != "predictor":
             raise ValueError("kind='nan' only applies to stage='predictor'")
+        if self.kind == "slow":
+            self.repeat = True  # a one-shot "slow" is just a short stall
 
     def matches(self, worker_id: str) -> bool:
         return self.worker is None or worker_id.startswith(self.worker)
@@ -83,6 +90,8 @@ class FaultSpec:
                 kw[key] = int(val)
             elif key in ("stall_s",):
                 kw[key] = float(val)
+            elif key in ("repeat",):
+                kw[key] = val.strip().lower() in ("1", "true", "yes")
             elif key in ("stage", "kind", "worker"):
                 kw[key] = val.strip()
             else:
@@ -123,13 +132,14 @@ class FaultPlan:
             for i, spec in enumerate(self._specs):
                 if (self._armed[i] and spec.stage == stage
                         and spec.matches(worker_id) and n >= spec.after):
-                    self._armed[i] = False
+                    if not spec.repeat:
+                        self._armed[i] = False
                     self.fired.append((worker_id, stage, spec.kind))
                     hit = spec
                     break
         if hit is None:
             return None
-        if hit.kind == "stall":
+        if hit.kind in ("stall", "slow"):
             time.sleep(hit.stall_s)
             return None
         if hit.kind == "nan":

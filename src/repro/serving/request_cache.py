@@ -63,12 +63,25 @@ class PredictionCache:
                 self._store.popitem(last=False)
 
     def predict_through(self, system, X: np.ndarray) -> np.ndarray:
-        """Serve X via the cache: only misses hit the inference system."""
+        """Serve X via the cache: only misses hit the inference system.
+
+        Degraded results never enter the unsalted (full-quality) key space:
+        a brownout-tier combine answered here would otherwise be replayed
+        as a full-ensemble answer long after pressure subsides
+        (DESIGN.md §11)."""
         cached, miss_idx = self.lookup(X)
         if miss_idx:
             missing = X[miss_idx]
-            Y_miss = system.predict(missing)
-            self.insert(missing, Y_miss)
+            submit = getattr(system, "predict_async", None)
+            if submit is not None:
+                h = submit(missing)
+                Y_miss = h.result(600.0)
+                quality = float(getattr(h, "quality", 1.0))
+            else:                       # bare predict-only backends: assume
+                Y_miss = system.predict(missing)   # full quality
+                quality = 1.0
+            if quality >= 1.0:
+                self.insert(missing, Y_miss)
             for j, i in enumerate(miss_idx):
                 cached[i] = Y_miss[j]
         return np.stack(cached, axis=0)

@@ -95,6 +95,20 @@ class ServingUnavailable(RuntimeError):
     of treating them as permanent errors."""
 
 
+class Overloaded(ServingUnavailable):
+    """The system refused the request at admission: serving it within its
+    deadline (or within the global admission byte/row budget) is infeasible
+    at the current pressure (DESIGN.md §11).  Raised *before* any pipeline
+    resources are consumed, so the caller can retry elsewhere immediately —
+    the HTTP layer maps it to 429 with a ``Retry-After`` computed from the
+    current drain estimate."""
+
+    def __init__(self, msg: str = "overloaded",
+                 retry_after_s: Optional[float] = None):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
+
+
 class WorkerCrashed(ServingUnavailable):
     """A worker stage thread died (or stalled past the watchdog) while the
     request had work on it and recovery could not complete it."""
@@ -232,6 +246,17 @@ class Request:
     retries: int = 0                    # quarantine replays charged so far
     cancel_event: threading.Event = field(default_factory=threading.Event,
                                           repr=False, compare=False)
+    # Members demoted mid-flight by the brownout controller (DESIGN.md §11).
+    # Mutated only by set.add (GIL-atomic); stages treat membership as
+    # advisory — a unit that raced past the check is simply served, the
+    # accounting closes either way.  Unlike ``cancel_event`` a demoted
+    # member's work is *forgiven* (renormalized partial answer), never
+    # DROPPED (which fails the whole request).
+    demoted: set = field(default_factory=set, repr=False, compare=False)
+    # (nbytes, rows) charged against the global AdmissionBudget; credited
+    # back by the system exactly once when the request completes.
+    budget_charge: Optional[tuple] = field(default=None, repr=False,
+                                           compare=False)
 
     def num_segments(self) -> int:
         return num_segments(self.n, self.segment_size)
@@ -247,6 +272,12 @@ class Request:
     def dropped(self) -> bool:
         """True when no stage should spend further work on this request."""
         return self.cancel_event.is_set() or self.expired()
+
+    def demoted_for(self, m: int) -> bool:
+        """True when member ``m`` was demoted off this request mid-flight
+        (brownout, DESIGN.md §11): its remaining segments are forgiven
+        instead of computed."""
+        return bool(self.demoted) and m in self.demoted
 
 
 @dataclass

@@ -10,9 +10,13 @@ Endpoints (stdlib only):
                     -> {"predictions": [[...], ...]}
                        plus "quality" < 1.0 when the result is a degraded
                        partial-ensemble combine (DESIGN.md §10)
-                    (504 when the deadline expires; 503 + Retry-After when
-                    capacity is transiently unavailable — quarantined
-                    member, retries exhausted; 400 on bad input)
+                    (504 when the deadline expires; 429 + Retry-After when
+                    admission refuses the request — infeasible deadline at
+                    the current pressure, or byte/row budget exhausted
+                    (DESIGN.md §11); 503 + Retry-After when capacity is
+                    transiently unavailable — quarantined member, retries
+                    exhausted; both Retry-After values derive from the live
+                    drain estimate; 400 on bad input)
   POST /predict     v1 compatibility shim: the original adaptive batcher —
                     requests buffered until a segment fills or ``max_wait_s``
                     elapses, then predicted as one batch (paper §I.B).  New
@@ -38,12 +42,12 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.serving.client import EnsembleClient
-from repro.serving.segments import (DeadlineExceeded, PredictOptions,
-                                    ServingUnavailable)
-from repro.serving.system import InferenceSystem
+import math
 
-RETRY_AFTER_S = 1       # advisory client backoff on 503 (respawn latency)
+from repro.serving.client import EnsembleClient
+from repro.serving.segments import (DeadlineExceeded, Overloaded,
+                                    PredictOptions, ServingUnavailable)
+from repro.serving.system import InferenceSystem
 
 
 class _Pending:
@@ -122,6 +126,13 @@ class AdaptiveBatcher:
                 p.event.set()
 
 
+def _header_s(retry_after_s: float) -> str:
+    """``Retry-After`` header value: whole seconds, never below 1 (the
+    header grammar is integer seconds; the JSON body carries the exact
+    float for clients that can use sub-second backoff)."""
+    return str(max(1, int(math.ceil(retry_after_s))))
+
+
 def _parse_options(payload: dict) -> PredictOptions:
     """Per-request options from the v2 JSON body (unknown keys ignored)."""
     kw = {}
@@ -150,6 +161,16 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, *a):              # quiet
             pass
+
+        def _retry_after(self, e: BaseException) -> float:
+            """Drain-estimate-derived backoff, shared by 429 and 503
+            (DESIGN.md §11).  An exception that computed its own estimate
+            at raise time (``Overloaded``) wins; otherwise ask the system
+            now."""
+            ra = getattr(e, "retry_after_s", None)
+            if ra is None:
+                ra = system.retry_after_s()
+            return round(float(ra), 3)
 
         def _json(self, code: int, payload, headers=None):
             body = json.dumps(payload).encode()
@@ -181,7 +202,13 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
                     "cache": ({"hits": cache.hits, "misses": cache.misses}
                               if cache is not None else None),
                     # online reconfiguration observability (DESIGN.md §8)
-                    "controller": ctl.stats() if ctl is not None else None})
+                    "controller": ctl.stats() if ctl is not None else None,
+                    # overload/brownout observability (DESIGN.md §11)
+                    "brownout": (system.brownout.stats()
+                                 if system.brownout is not None else None),
+                    "admission_budget": (
+                        system.admission_budget.snapshot()
+                        if system.admission_budget is not None else None)})
             else:
                 self._json(404, {"error": "not found"})
 
@@ -206,14 +233,26 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
                     except DeadlineExceeded as e:
                         self._json(504, {"error": f"deadline exceeded: {e}"})
                         return
+                    except Overloaded as e:
+                        # refused at admission (DESIGN.md §11): infeasible
+                        # deadline or exhausted byte/row budget — 429, with
+                        # Retry-After computed from the drain estimate
+                        ra = self._retry_after(e)
+                        self._json(429,
+                                   {"error": f"{type(e).__name__}: {e}",
+                                    "retry_after_s": ra},
+                                   headers={"Retry-After": _header_s(ra)})
+                        return
                     except ServingUnavailable as e:
                         # transient capacity failure (quarantined member /
                         # exhausted retries, DESIGN.md §10): retryable —
-                        # 503 + Retry-After, never a permanent error
+                        # 503 + Retry-After, never a permanent error.  Same
+                        # drain-estimate-derived value as the 429 path
+                        ra = self._retry_after(e)
                         self._json(503,
-                                   {"error": f"{type(e).__name__}: {e}"},
-                                   headers={"Retry-After":
-                                            str(RETRY_AFTER_S)})
+                                   {"error": f"{type(e).__name__}: {e}",
+                                    "retry_after_s": ra},
+                                   headers={"Retry-After": _header_s(ra)})
                         return
                     if y is None:
                         self._json(500, {"error": "prediction failed"})

@@ -37,13 +37,13 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocation import AllocationMatrix
 from repro.serving.accumulator import PredictionAccumulator, RequestHandle
-from repro.serving.admission import AdmissionQueue
+from repro.serving.admission import AdmissionBudget, AdmissionQueue
 from repro.serving.combiner import DeviceCombiner
 from repro.serving.metrics import StageTimers
 from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, FLUSH, OOM,
                                     FlushBarrier, SHUTDOWN, DeadlineExceeded,
-                                    MemberUnavailable, Message, PredictOptions,
-                                    Request, RetriesExhausted)
+                                    MemberUnavailable, Message, Overloaded,
+                                    PredictOptions, Request, RetriesExhausted)
 from repro.serving.worker import HEALTH_DEAD, Worker
 
 _COMBINE_RULES = ("mean", "weighted", "vote", "pallas")
@@ -72,7 +72,8 @@ class InferenceSystem:
                  watchdog_s: float = 5.0,
                  supervise_interval_s: float = 0.05,
                  retry_budget: int = 2,
-                 nan_guard: bool = False):
+                 nan_guard: bool = False,
+                 admission_budget=None):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
@@ -100,6 +101,15 @@ class InferenceSystem:
         self.generation = 0              # bumped by each applied reconfig
         self.controller = None           # attached ReconfigController, if any
         self._profiler = None            # attached LiveBench sink, if any
+        self.brownout = None             # attached BrownoutController (§11)
+        # global admitted-work budget (DESIGN.md §11 backpressure): an int
+        # is a byte cap, an AdmissionBudget carries byte and/or row caps
+        if admission_budget is None or \
+                isinstance(admission_budget, AdmissionBudget):
+            self.admission_budget = admission_budget
+        else:
+            self.admission_budget = AdmissionBudget(
+                max_bytes=int(admission_budget))
         # fault tolerance (DESIGN.md §10): opt-in — unsupervised systems
         # keep the paper's §II.C.2 all-or-nothing sentinel semantics
         self._fault_plan = fault_plan
@@ -348,6 +358,49 @@ class InferenceSystem:
         if member_down is not None and self.controller is not None:
             self.controller.note_member_down(*member_down)
 
+    def demote_request(self, rid: int, keep_members) -> bool:
+        """Demote in-flight request ``rid`` to the members in
+        ``keep_members`` (brownout, DESIGN.md §11): members outside the set
+        are added to ``Request.demoted`` and every stage *forgives* their
+        remaining units — the batcher never packs them, the predictor never
+        dispatches fully-demoted chunks, and the sender discards staged
+        rows behind the in-flight-ledger pop-gate — so the request
+        completes with a renormalized partial-ensemble answer instead of
+        waiting out the heavy backlog.  Marking is GIL-atomic ``set.add``
+        (advisory: a unit that raced past a stage's check is simply served;
+        accounting closes either way).  Refuses 'pallas' requests (the
+        fused combine needs every member) and never demotes a request's
+        last remaining member.  Returns True when at least one member was
+        demoted."""
+        with self.accumulator._lock:
+            handle = self.accumulator._requests.get(rid)
+        if handle is None:
+            return False                  # already completed/failed
+        req = handle.req
+        if req.combine == "pallas":
+            return False
+        keep = set(keep_members)
+        kept = [m for m in req.members
+                if m in keep and m not in req.demoted]
+        drop = [m for m in req.members
+                if m not in keep and m not in req.demoted]
+        if not kept or not drop:
+            return False
+        for m in drop:
+            req.demoted.add(m)
+        self.timers.inc("requests_demoted")
+        self.timers.inc("members_demoted", len(drop))
+        return True
+
+    def retry_after_s(self) -> float:
+        """Drain-estimate-derived retry hint shared by the 429 and 503
+        responses (DESIGN.md §11): roughly how long until the deepest
+        worker backlog clears, never a hardcoded constant."""
+        if self.brownout is not None:
+            return self.brownout.drain_estimate_s()
+        from repro.serving.control.overload import estimate_drain_s
+        return estimate_drain_s(self, self._profiler)
+
     def set_profiler(self, profiler) -> None:
         """Attach a live-bench sink (``observe``/``note_request``); workers
         report per-batch latency and the broadcaster reports per-member
@@ -396,8 +449,13 @@ class InferenceSystem:
             # whenever its threads wake up
             if handle.error is None and handle.req.retries == 0 and \
                     handle.degraded_rows == 0 and \
+                    not handle.keep_buffer and \
                     len(self._buffer_pool) <= self.max_in_flight:
                 self._buffer_pool.append(handle.req.x)
+        charge = handle.req.budget_charge
+        if charge is not None:
+            handle.req.budget_charge = None
+            self._credit_admission(charge)
         self._inflight.release()
 
     def _request_weights(self, members: List[int],
@@ -412,7 +470,8 @@ class InferenceSystem:
 
     # ---- the segment ids broadcaster -----------------------------------------
     def _broadcast(self, X: np.ndarray, members=None,
-                   options: Optional[PredictOptions] = None) -> RequestHandle:
+                   options: Optional[PredictOptions] = None, *,
+                   plan: bool = True) -> RequestHandle:
         opts = options or PredictOptions()
         n, width = X.shape
         if members is None:
@@ -429,6 +488,30 @@ class InferenceSystem:
             # begin()'s remaining==0 fast path would fire on_complete while
             # the submit lock is held (self-deadlock on the topology lock)
             return self._resolved_handle(X, n, members, combine)
+        # overload layer (DESIGN.md §11): tier planning + cost-aware
+        # admission.  At brownout level 0 (and with no controller/budget
+        # attached) every branch below is a no-op, so zero-pressure results
+        # stay bit-identical to the pre-brownout engine.  ``plan=False`` is
+        # the cascade-escalation path: it must reach the heavy members the
+        # tier just dropped.
+        tier_quality = 1.0
+        escalate: List[int] = []
+        ctl = self.brownout
+        if ctl is not None and plan:
+            requested = members
+            members, tier_quality = ctl.plan_members(members, opts)
+            if tier_quality < 1.0 and ctl.cascade_margin is not None:
+                escalate = [m for m in requested if m not in members]
+            ctl.check_admission(n, members, opts)  # may raise Overloaded
+        charge = None
+        if self.admission_budget is not None:
+            nbytes, rows = n * width * 4, n * len(members)
+            if not self.admission_budget.try_charge(nbytes, rows):
+                self.timers.inc("admission_rejections")
+                raise Overloaded(
+                    "admission byte/row budget exhausted",
+                    retry_after_s=round(self.retry_after_s(), 3))
+            charge = (nbytes, rows)
         deadline = opts.deadline_at()     # fixed at admission
         remaining = None if deadline is None \
             else deadline - time.perf_counter()
@@ -437,16 +520,30 @@ class InferenceSystem:
         if remaining is not None and (
                 remaining <= 0 or
                 not self._inflight.acquire(timeout=remaining)):
+            self._credit_admission(charge)
             return self._resolved_handle(X, 0, members, combine,
                                          DeadlineExceeded(
                                              "deadline expired at admission"))
         if remaining is None:
             self._inflight.acquire()
         try:
-            return self._submit(X, n, width, members, combine, opts, deadline)
+            handle = self._submit(X, n, width, members, combine, opts,
+                                  deadline, tier_quality=tier_quality,
+                                  charge=charge,
+                                  keep_buffer=bool(escalate))
         except BaseException:
             self._inflight.release()      # a failed submit must not leak a slot
+            self._credit_admission(charge)   # the request never went live
             raise
+        if escalate:
+            from repro.serving.control.overload import CascadeHandle
+            return CascadeHandle(self, handle, escalate,
+                                 ctl.cascade_margin, opts)
+        return handle
+
+    def _credit_admission(self, charge) -> None:
+        if charge is not None and self.admission_budget is not None:
+            self.admission_budget.credit(*charge)
 
     def _resolved_handle(self, X, n: int, members, combine,
                          error: Optional[BaseException] = None
@@ -465,7 +562,8 @@ class InferenceSystem:
 
     def _submit(self, X: np.ndarray, n: int, width: int,
                 members: List[int], combine: str, opts: PredictOptions,
-                deadline: Optional[float]) -> RequestHandle:
+                deadline: Optional[float], *, tier_quality: float = 1.0,
+                charge=None, keep_buffer: bool = False) -> RequestHandle:
         with self._submit_lock:
             if self._shutdown:
                 # the unsynchronized predict_async check can race shutdown()
@@ -493,6 +591,12 @@ class InferenceSystem:
                           combine, priority=opts.level(), deadline=deadline,
                           t_submit=time.perf_counter())
             handle = self.accumulator.begin(req, on_segment=opts.on_segment)
+            if tier_quality < 1.0:
+                # brownout tier (DESIGN.md §11): the request was planned
+                # against a member subset — stamp the served weight
+                # fraction; mid-flight degradation multiplies onto it
+                handle.quality = tier_quality
+            handle.keep_buffer = keep_buffer
             # static striping: (s, m) -> one instance; makes per-device
             # contribution counts deterministic for the partial combine.
             # Rotating by rid spreads single-segment (small) requests across
@@ -514,6 +618,11 @@ class InferenceSystem:
                     comb.begin(req, exp)
             for w, s in plan:
                 w.input_queue.put((req, s), req.priority)
+            # budget ownership transfers to the live request LAST (nothing
+            # below here raises): from now on _on_request_complete credits
+            # it back exactly once; any earlier exception leaves it unset
+            # and _broadcast's except path credits instead
+            req.budget_charge = charge
         return handle
 
     # ---- modes -----------------------------------------------------------------
@@ -634,6 +743,8 @@ class InferenceSystem:
             self.supervisor.stop()
         if self.controller is not None:
             self.controller.stop()
+        if self.brownout is not None:
+            self.brownout.stop()
         for w in workers:
             w.input_queue.put(SHUTDOWN)
         for w in workers:

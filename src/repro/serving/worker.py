@@ -540,6 +540,19 @@ class Worker:
             self.prediction_queue.put(Message(
                 seg.DROPPED, None, None, rid=req.rid))
             return open_batch
+        if req.demoted_for(self.model_idx):
+            # demoted mid-flight (brownout, DESIGN.md §11): forgive the
+            # unit instead of packing — P=None with s >= 0 debits this
+            # member's rows and tracks the missing weight for the
+            # completion-time renormalization.  Never DROPPED (that fails
+            # the whole request).  Checked BEFORE the ledger add, so no
+            # pop-gate is involved: this batcher is the unit's only owner.
+            if self.combiner is None or self.combiner.unexpect(req, s):
+                lo, hi = req.bounds(s)
+                self.timers.inc("rows_demoted", hi - lo)
+                self.prediction_queue.put(Message(
+                    s, self.model_idx, None, rid=req.rid))
+            return open_batch
         # in-flight ledger entry BEFORE any rows are packed: from here the
         # descriptor is this worker's responsibility until the sender (or a
         # replaying supervisor) pops it — the one-statement gap between the
@@ -657,8 +670,9 @@ class Worker:
                 self.timers.add("dispatch_wait.high" if chunk.level ==
                                 seg.PRIORITY_HIGH else "dispatch_wait.normal",
                                 t0 - chunk.t_enq)
-                if chunk.spans and all(sp.req.dropped()
-                                       for sp in chunk.spans):
+                if chunk.spans and all(
+                        sp.req.dropped() or sp.req.demoted_for(self.model_idx)
+                        for sp in chunk.spans):
                     group.append((chunk, None, t0, True))   # never dispatched
                     continue
                 committed += 1
@@ -770,6 +784,21 @@ class Worker:
         for sp in chunk.spans:
             lo, hi = sp.req.bounds(sp.s)
             key = (sp.req.rid, sp.s)
+            if sp.req.demoted_for(self.model_idx) and not sp.req.dropped():
+                # demoted mid-flight (brownout, DESIGN.md §11): discard any
+                # staged rows and forgive the whole segment behind the
+                # ledger pop-gate (exactly once vs a replaying supervisor
+                # — same gate as the forwarding path).  Checked BEFORE the
+                # dropped branch: a chunk skipped because its spans are
+                # demoted must forgive, never DROPPED-fail the request.
+                staging.pop(key, None)
+                self.timers.inc("rows_demoted", sp.n)
+                if self._ledger.pop(key, None) is not None and (
+                        self.combiner is None or
+                        self.combiner.unexpect(sp.req, sp.s)):
+                    self.prediction_queue.put(Message(
+                        sp.s, self.model_idx, None, rid=sp.req.rid))
+                continue
             if skipped or sp.req.dropped():
                 # purge any rows staged by this segment's earlier chunks
                 # (whatever order the chunks retired in, its LAST chunk
