@@ -16,19 +16,29 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: overhead,serving,table1,table3,"
+                    help="comma list: overhead,serving,sim,table1,table3,"
                          "stability,roofline")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="path for the machine-readable serving results "
                          "('' disables)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed for the serving job (recorded "
+                         "in the JSON as serving.rng_seed)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    help="serving scenario to run (repeatable); default all "
+                         "— see benchmarks/serving_hotpath.py SCENARIOS")
     args = ap.parse_args()
     want = set(filter(None, args.only.split(",")))
 
     from benchmarks import (overhead, roofline_report, serving_hotpath,
-                            stability, table1_throughput, table3_bbs)
+                            sim_bench, stability, table1_throughput,
+                            table3_bbs)
     jobs = [
         ("overhead", overhead.run),          # paper §IV.A
-        ("serving", serving_hotpath.run),    # hot-path A/B (ISSUE 1)
+        ("serving",                          # hot-path A/B (ISSUE 1)
+         lambda: serving_hotpath.run(seed=args.seed,
+                                     scenarios=args.scenario)),
+        ("sim", sim_bench.run),              # discrete-event sim (ISSUE 8)
         ("table1", table1_throughput.run),   # paper Table I
         ("table3", table3_bbs.run),          # paper Table III
         ("stability", stability.run),        # paper §IV.B
@@ -45,7 +55,7 @@ def main() -> None:
         except Exception as e:  # keep the harness going; report the failure
             print(f"{name}:ERROR,{type(e).__name__}: {e}", file=sys.stderr)
             raise
-        if name in ("overhead", "serving") and isinstance(result, dict):
+        if name in ("overhead", "serving", "sim") and isinstance(result, dict):
             serving_results[name] = result
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
 

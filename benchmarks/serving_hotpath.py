@@ -78,11 +78,29 @@ Acceptance (ISSUE 6): killing one sibling mid-trace loses zero requests
 (``fault_recovery.completed_ratio`` == 1.0 at full quality) and recovery
 lands within a second (``fault_recovery.recovery_ok`` == 1.0), both gated
 by check_regression.py.
+  * ``sim_fidelity``  the calibration workload (ISSUE 8, DESIGN.md §12):
+                    a real run on simulated device time records its own
+                    request trace (``system.trace_recorder``) and feeds a
+                    LiveBench; the trace then replays in the discrete-event
+                    simulator (``repro.serving.sim``) against a
+                    ``ServiceModel`` fitted from that LiveBench snapshot.
+                    Reports sim/real throughput and p99 ratios plus a
+                    ``fidelity_ok`` verdict (both within 20%).
+
+Every scenario draws its inputs from ``--seed`` (recorded as ``rng_seed``
+in BENCH_serving.json); ``--scenario NAME`` (repeatable) runs a subset —
+the serving-smoke CI job uses it to stay within its time budget.
+``--replay-trace PATH`` replays a trace recorded with
+``launch/serve.py --record-trace`` against a fake-device system instead.
+
 Acceptance (ISSUE 7): under 3x saturation every request completes or is
 typed-rejected (``overload_brownout.completed_or_shed_ratio`` == 1.0) and
 brownout improves normal-class p99 >= 2x over the uncontrolled run
 (``overload_brownout.brownout_p99_improvement``), both gated by
 check_regression.py.
+Acceptance (ISSUE 8): the simulator reproduces the real mixed-delay run's
+throughput and pooled p99 within 20% (``sim_fidelity.fidelity_ok``, gated
+by check_regression.py).
 """
 from __future__ import annotations
 
@@ -235,7 +253,7 @@ def _measure_mixed_priority(system, bulk_X, small_Xs, rounds: int,
 
 
 def _measure_skewed(cfgs, params, devs, seq: int, requests: int,
-                    fake_delay_us: int, steal: bool) -> dict:
+                    fake_delay_us: int, steal: bool, seed: int = 0) -> dict:
     """One skewed_load pass: 4:1 per-member request skew against a hot
     member with heterogeneous data-parallel instances (d0@8 slow, d1@128
     fast); the cold member rides the slow device.  With ``steal`` the
@@ -247,7 +265,7 @@ def _measure_skewed(cfgs, params, devs, seq: int, requests: int,
     seg_sz = 128
     A = np.array([[8, 128], [128, 0]])
     alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
-    srng = np.random.default_rng(4)
+    srng = np.random.default_rng([seed, 4])
     member_lists = [[0] if i % 5 < 4 else [1] for i in range(requests)]
     Xs = [srng.integers(0, 512, (seg_sz, seq)).astype(np.int32)
           for _ in member_lists]
@@ -278,7 +296,7 @@ def _measure_skewed(cfgs, params, devs, seq: int, requests: int,
 
 
 def _measure_fault_recovery(cfgs, params, seq: int, requests: int,
-                            fake_delay_us: int) -> dict:
+                            fake_delay_us: int, seed: int = 0) -> dict:
     """One chaos pass (ISSUE 6): member 0 runs two equal data-parallel
     siblings (d0/d1); a FaultPlan kills the d1 sibling's predictor after 3
     chunks.  Simulated device time makes the service rates — and thus the
@@ -298,7 +316,7 @@ def _measure_fault_recovery(cfgs, params, seq: int, requests: int,
     alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
     fp = FaultPlan(FaultSpec(stage="predictor", kind="raise", after=3,
                              worker="w1.0"))
-    srng = np.random.default_rng(6)
+    srng = np.random.default_rng([seed, 6])
     Xs = [srng.integers(0, 512, (seg_sz, seq)).astype(np.int32)
           for _ in range(requests)]
     marks: dict = {}
@@ -352,7 +370,8 @@ def _measure_fault_recovery(cfgs, params, seq: int, requests: int,
 
 def _measure_overload_brownout(cfgs, params, seq: int, requests: int,
                                pace_s: float, cheap_delay_us: int,
-                               heavy_delay_us: int, brownout: bool) -> dict:
+                               heavy_delay_us: int, brownout: bool,
+                               seed: int = 0) -> dict:
     """One overload pass (ISSUE 7): member 0 cheap, member 1 heavy (each on
     its own simulated device), requests paced at ~3x the heavy member's
     service rate.  With ``brownout`` a :class:`BrownoutController` (explicit
@@ -368,7 +387,7 @@ def _measure_overload_brownout(cfgs, params, seq: int, requests: int,
     devs = host_cpus(2, memory_bytes=8 * GiB)
     A = np.array([[seg_sz, 0], [0, seg_sz]])
     alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
-    srng = np.random.default_rng(7)
+    srng = np.random.default_rng([seed, 7])
     Xs = [srng.integers(0, 512, (seg_sz, seq)).astype(np.int32)
           for _ in range(requests)]
     budget = (AdmissionBudget(max_bytes=40 * seg_sz * seq * 4)
@@ -423,177 +442,440 @@ def _measure_overload_brownout(cfgs, params, seq: int, requests: int,
     return out
 
 
+def _measure_sim_fidelity(cfgs, params, seq: int, requests: int,
+                          pace_s: float, cheap_delay_us: int,
+                          heavy_delay_us: int, seed: int = 0) -> dict:
+    """Calibration harness for the discrete-event simulator (DESIGN.md §12).
+
+    One real pass on simulated device time (two members with heterogeneous
+    ``fake_delay_us``, each on its own device, all requests exactly one
+    compiled batch so LiveBench attributes every observation to the bucket
+    it ran in), recording the offered trace and fitting a
+    :class:`ServiceModel` from the LiveBench EWMA the run itself produced.
+    The recorded trace then replays in the simulator on the same
+    allocation, and the pooled p99 + request throughput must land within
+    20% of the real run (``fidelity_ok``, gated by check_regression.py) —
+    the evidence that conclusions drawn in-sim (forecast-fed replanning,
+    dispatch-ahead tuning, EDF) transfer to the live engine.
+
+    The pace runs the heavy member slightly *past* saturation on purpose:
+    the p99 tail is then dominated by deterministic backlog growth — which
+    the simulator reproduces exactly from the recorded arrival times —
+    rather than by host scheduling jitter, which no deterministic model
+    reproduces.  (At comfortable utilization the real tail is pure sleep/
+    thread jitter and the comparison measures the host, not the sim.)"""
+    import threading
+
+    from repro.serving.control import LiveBench
+    from repro.serving.sim import ServiceModel, SimSystem
+    from repro.serving.system import InferenceSystem
+    from repro.serving.trace import TraceRecorder
+
+    seg_sz = 64
+    devs = host_cpus(2, memory_bytes=8 * GiB)
+    A = np.array([[seg_sz, 0], [0, seg_sz]])
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    srng = np.random.default_rng([seed, 8])
+    Xs = [srng.integers(0, 512, (seg_sz, seq)).astype(np.int32)
+          for _ in range(requests)]
+    live = LiveBench(cfgs)
+    rec = TraceRecorder()
+    lat: list = []
+    lock = threading.Lock()
+    with InferenceSystem(cfgs, params, alloc, segment_size=seg_sz,
+                         max_seq=seq, fake=True,
+                         fake_delay_us=cheap_delay_us,
+                         max_in_flight=requests, dispatch_ahead=4,
+                         max_wait_us=200) as system:
+        for w in system.instances(1):      # heterogeneous member costs
+            w.fake_delay_us = heavy_delay_us
+        system.set_profiler(live)
+        for m in (0, 1):                   # warm shapes + the EWMA prior
+            system.predict(Xs[0], members=[m])
+            system.predict(Xs[1], members=[m])
+        system.trace_recorder = rec        # record only the measured trace
+
+        def waiter(h, t1):
+            h.result(600.0)
+            with lock:
+                lat.append(time.perf_counter() - t1)
+
+        threads = []
+        t0 = time.perf_counter()
+        for i, x in enumerate(Xs):
+            h = system.predict_async(x, members=[i % 2])
+            th = threading.Thread(target=waiter,
+                                  args=(h, time.perf_counter()))
+            th.start()
+            threads.append(th)
+            time.sleep(pace_s)
+        for th in threads:
+            th.join()
+        real_dt = time.perf_counter() - t0
+        snapshot = live.snapshot()
+
+    real = {"requests": requests, "seconds": real_dt,
+            "req_per_s": requests / real_dt,
+            "p50_ms": 1e3 * _pctl(lat, 50), "p99_ms": 1e3 * _pctl(lat, 99)}
+
+    svc = ServiceModel.from_livebench(snapshot)
+    sim = SimSystem.from_alloc(alloc, svc, segment_size=seg_sz,
+                               dispatch_ahead=4, max_wait_us=200)
+    trace = rec.events()
+    sim.run(trace)
+    r = sim.results()
+    sim_out = {"requests": len(trace), "req_per_s": r["throughput_req_per_s"],
+               "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+               "completed": r["completed"], "failed": r["failed"]}
+    thr_ratio = sim_out["req_per_s"] / real["req_per_s"]
+    p99_ratio = sim_out["p99_ms"] / max(real["p99_ms"], 1e-9)
+    tol = 0.20
+    fidelity_ok = float(abs(thr_ratio - 1.0) <= tol and
+                        abs(p99_ratio - 1.0) <= tol and
+                        r["completed"] == len(trace))
+    return {"real": real, "sim": sim_out, "trace_requests": len(trace),
+            "throughput_ratio": thr_ratio, "p99_ratio": p99_ratio,
+            "tolerance": tol, "fidelity_ok": fidelity_ok}
+
+
+def replay_trace(path: str, *, seq: int = 16, workers: int = 2,
+                 speed: float = 1.0, csv: bool = True) -> dict:
+    """Replay a recorded request trace (``--record-trace`` /
+    ``system.trace_recorder``) against a real fake-device system,
+    preserving per-request priority, deadline and member subsets and
+    pacing submissions by the recorded inter-arrival gaps (divided by
+    ``speed``).  The offline twin of the simulator's ``sim.run(trace)``."""
+    import threading
+
+    import jax
+    import repro.models as M
+    from repro.serving.system import InferenceSystem
+    from repro.serving.trace import load_trace
+
+    events = load_trace(path)
+    cfgs = ensemble("ENS4")[:workers]
+    rng = jax.random.PRNGKey(0)
+    params = [M.init_params(jax.random.fold_in(rng, i), c)
+              for i, c in enumerate(cfgs)]
+    devs = host_cpus(1, memory_bytes=8 * GiB)
+    A = np.full((1, len(cfgs)), 64)
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    srng = np.random.default_rng(0)
+    lat: list = []
+    lock = threading.Lock()
+    failed = 0
+    with InferenceSystem(cfgs, params, alloc, segment_size=64, max_seq=seq,
+                         fake=True, max_in_flight=max(64, len(events)),
+                         max_wait_us=500) as system:
+        system.predict(srng.integers(0, 512, (8, seq)).astype(np.int32))
+
+        def waiter(h, t1):
+            nonlocal failed
+            try:
+                h.result(600.0)
+            except Exception:
+                with lock:
+                    failed += 1
+                return
+            with lock:
+                lat.append(time.perf_counter() - t1)
+
+        threads = []
+        t0 = time.perf_counter()
+        for ev in events:
+            target = t0 + ev.t / speed
+            delay = target - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            X = srng.integers(0, 512, (ev.rows, seq)).astype(np.int32)
+            members = None if ev.members is None else list(ev.members)
+            opts = PredictOptions(priority=ev.priority,
+                                  deadline_ms=ev.deadline_ms)
+            try:
+                h = system.predict_async(X, members=members, options=opts)
+            except Exception:
+                with lock:
+                    failed += 1
+                continue
+            th = threading.Thread(target=waiter,
+                                  args=(h, time.perf_counter()))
+            th.start()
+            threads.append(th)
+        for th in threads:
+            th.join()
+        dt = time.perf_counter() - t0
+    out = {"trace": path, "requests": len(events), "speed": speed,
+           "seconds": dt, "completed": len(lat), "failed": failed,
+           "req_per_s": len(lat) / dt,
+           "p50_ms": 1e3 * _pctl(lat, 50) if lat else 0.0,
+           "p99_ms": 1e3 * _pctl(lat, 99) if lat else 0.0}
+    if csv:
+        print(f"serving_hotpath:replay.req_per_s,{out['req_per_s']:.1f},")
+        print(f"serving_hotpath:replay.p50/p99_ms,{out['p50_ms']:.1f},"
+              f"{out['p99_ms']:.1f}")
+    return out
+
+
+SCENARIOS = ("core", "many_small", "mixed_priority", "skewed_load",
+             "fault_recovery", "overload_brownout", "sim_fidelity")
+
+
 def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
         small_concurrency=48, small_rounds=8, small_max_wait_us=2000,
         mixed_rounds=3, mixed_smalls=8, mixed_bulk=1024,
         skew_requests=40, skew_delay_us=4000,
         fault_requests=32, fault_delay_us=4000,
         overload_requests=120, overload_pace_s=0.00133,
-        overload_cheap_us=400, overload_heavy_us=4000):
+        overload_cheap_us=400, overload_heavy_us=4000,
+        fidelity_requests=150, fidelity_pace_s=0.008,
+        fidelity_cheap_us=10000, fidelity_heavy_us=20000,
+        seed=0, scenarios=None):
     import jax
     import repro.models as M
     from repro.serving.system import InferenceSystem
 
+    sel = set(SCENARIOS) if not scenarios else set(scenarios)
+    unknown = sel - set(SCENARIOS)
+    if unknown:
+        raise ValueError(f"unknown scenarios {sorted(unknown)} "
+                         f"(expected a subset of {list(SCENARIOS)})")
+
     cfgs = ensemble("ENS4")[:workers]
-    rng = jax.random.PRNGKey(0)
+    rng = jax.random.PRNGKey(seed)
     params = [M.init_params(jax.random.fold_in(rng, i), c)
               for i, c in enumerate(cfgs)]
     devs = host_cpus(1, memory_bytes=8 * GiB)       # ONE shared device
     A = np.full((1, len(cfgs)), 8)
     alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
-    X = np.random.default_rng(0).integers(0, 512, (n_samples, seq)).astype(np.int32)
-
-    results = {}
-    with SeedSystem(cfgs, alloc, max_seq=seq) as system:
-        results["seed"] = _measure(system, X, requests, pipelined=False)
-    for name, coalesce in (("pipelined", False), ("coalesced", True)):
-        with InferenceSystem(cfgs, params, alloc, segment_size=128,
-                             max_seq=seq, fake=True, device_combine=True,
-                             max_in_flight=4, coalesce=coalesce) as system:
-            results[name] = _measure(system, X, requests, pipelined=True)
-
-    results["speedup"] = (results["pipelined"]["segments_per_sec"] /
-                          results["seed"]["segments_per_sec"])
-    # single large requests: coalescing must not regress the PR-1 engine
-    results["large_request_ratio"] = (
-        results["coalesced"]["segments_per_sec"] /
-        results["pipelined"]["segments_per_sec"])
-
-    # ---- many-small-requests: the north-star workload (real tiny models) ----
+    X = np.random.default_rng([seed, 0]).integers(
+        0, 512, (n_samples, seq)).astype(np.int32)
     small_cfgs = cfgs[:2]
     small_params = params[:2]
     A_small = np.full((1, len(small_cfgs)), 16)
     alloc_small = AllocationMatrix(devs, [c.name for c in small_cfgs], A_small)
-    sizes = [1, 2, 3, 4, 6]                 # all <= segment_size/2 = 32
-    srng = np.random.default_rng(1)
-    Xs = [srng.integers(0, 512, (sizes[i % len(sizes)], seq)).astype(np.int32)
-          for i in range(small_concurrency)]
-    many = {}
-    for name, coalesce in (("pipelined", False), ("coalesced", True)):
-        with InferenceSystem(small_cfgs, small_params, alloc_small,
-                             segment_size=64, max_seq=seq,
-                             device_combine=True, coalesce=coalesce,
-                             max_in_flight=small_concurrency,
-                             max_wait_us=small_max_wait_us) as system:
-            many[name] = _measure_many_small(system, Xs, small_rounds)
-    many["speedup"] = (many["coalesced"]["segments_per_sec"] /
-                       many["pipelined"]["segments_per_sec"])
-    results["many_small"] = many
+
+    results = {"rng_seed": seed, "scenarios": sorted(sel)}
+    if "core" in sel:
+        with SeedSystem(cfgs, alloc, max_seq=seq) as system:
+            results["seed"] = _measure(system, X, requests, pipelined=False)
+        for name, coalesce in (("pipelined", False), ("coalesced", True)):
+            with InferenceSystem(cfgs, params, alloc, segment_size=128,
+                                 max_seq=seq, fake=True, device_combine=True,
+                                 max_in_flight=4, coalesce=coalesce) as system:
+                results[name] = _measure(system, X, requests, pipelined=True)
+
+        results["speedup"] = (results["pipelined"]["segments_per_sec"] /
+                              results["seed"]["segments_per_sec"])
+        # single large requests: coalescing must not regress the PR-1 engine
+        results["large_request_ratio"] = (
+            results["coalesced"]["segments_per_sec"] /
+            results["pipelined"]["segments_per_sec"])
+
+    # ---- many-small-requests: the north-star workload (real tiny models) ----
+    if "many_small" in sel:
+        sizes = [1, 2, 3, 4, 6]             # all <= segment_size/2 = 32
+        srng = np.random.default_rng([seed, 1])
+        Xs = [srng.integers(0, 512,
+                            (sizes[i % len(sizes)], seq)).astype(np.int32)
+              for i in range(small_concurrency)]
+        many = {}
+        for name, coalesce in (("pipelined", False), ("coalesced", True)):
+            with InferenceSystem(small_cfgs, small_params, alloc_small,
+                                 segment_size=64, max_seq=seq,
+                                 device_combine=True, coalesce=coalesce,
+                                 max_in_flight=small_concurrency,
+                                 max_wait_us=small_max_wait_us) as system:
+                many[name] = _measure_many_small(system, Xs, small_rounds)
+        many["speedup"] = (many["coalesced"]["segments_per_sec"] /
+                           many["pipelined"]["segments_per_sec"])
+        results["many_small"] = many
 
     # ---- mixed-priority: SLO traffic behind a bulk scan (real tiny models) --
-    srng = np.random.default_rng(2)
-    bulk_X = srng.integers(0, 512, (mixed_bulk, seq)).astype(np.int32)
-    small_Xs = [srng.integers(0, 512, (2 + i % 3, seq)).astype(np.int32)
-                for i in range(mixed_smalls)]
-    # segment_size 16 keeps compiled chunks small and dispatch_ahead=1
-    # keeps the committed (non-preemptible) window shallow: on a shared
-    # device, every committed bulk chunk is queue time a high-priority
-    # chunk cannot jump — the SLO deployment knob the chunk-granular
-    # pipeline exposes (DESIGN.md §3)
-    mixed = {}
-    for mode, high in (("fifo", False), ("priority", True)):
-        with InferenceSystem(small_cfgs, small_params, alloc_small,
-                             segment_size=16, max_seq=seq,
-                             device_combine=True, coalesce=True,
-                             max_in_flight=32, dispatch_ahead=1,
-                             max_wait_us=small_max_wait_us) as system:
-            mixed[mode] = _measure_mixed_priority(
-                system, bulk_X, small_Xs, mixed_rounds, high_priority=high)
-    mixed["hp_p50_improvement"] = (mixed["fifo"]["high"]["p50_ms"] /
-                                   mixed["priority"]["high"]["p50_ms"])
-    mixed["hp_p99_improvement"] = (mixed["fifo"]["high"]["p99_ms"] /
-                                   mixed["priority"]["high"]["p99_ms"])
-    mixed["throughput_ratio"] = (mixed["priority"]["segments_per_sec"] /
-                                 mixed["fifo"]["segments_per_sec"])
-    results["mixed_priority"] = mixed
+    if "mixed_priority" in sel:
+        srng = np.random.default_rng([seed, 2])
+        bulk_X = srng.integers(0, 512, (mixed_bulk, seq)).astype(np.int32)
+        small_Xs = [srng.integers(0, 512, (2 + i % 3, seq)).astype(np.int32)
+                    for i in range(mixed_smalls)]
+        # segment_size 16 keeps compiled chunks small and dispatch_ahead=1
+        # keeps the committed (non-preemptible) window shallow: on a shared
+        # device, every committed bulk chunk is queue time a high-priority
+        # chunk cannot jump — the SLO deployment knob the chunk-granular
+        # pipeline exposes (DESIGN.md §3)
+        mixed = {}
+        for mode, high in (("fifo", False), ("priority", True)):
+            with InferenceSystem(small_cfgs, small_params, alloc_small,
+                                 segment_size=16, max_seq=seq,
+                                 device_combine=True, coalesce=True,
+                                 max_in_flight=32, dispatch_ahead=1,
+                                 max_wait_us=small_max_wait_us) as system:
+                mixed[mode] = _measure_mixed_priority(
+                    system, bulk_X, small_Xs, mixed_rounds,
+                    high_priority=high)
+        mixed["hp_p50_improvement"] = (mixed["fifo"]["high"]["p50_ms"] /
+                                       mixed["priority"]["high"]["p50_ms"])
+        mixed["hp_p99_improvement"] = (mixed["fifo"]["high"]["p99_ms"] /
+                                       mixed["priority"]["high"]["p99_ms"])
+        mixed["throughput_ratio"] = (mixed["priority"]["segments_per_sec"] /
+                                     mixed["fifo"]["segments_per_sec"])
+        results["mixed_priority"] = mixed
 
     # ---- skewed_load: one hot member, work stealing off vs on (ISSUE 4) -----
-    skew_devs = host_cpus(2, memory_bytes=8 * GiB)
-    skewed = {}
-    for mode, steal in (("no_steal", False), ("steal", True)):
-        skewed[mode] = _measure_skewed(small_cfgs, small_params, skew_devs,
-                                       seq, skew_requests, skew_delay_us,
-                                       steal)
-    skewed["steal_throughput_ratio"] = (
-        skewed["steal"]["segments_per_sec"] /
-        skewed["no_steal"]["segments_per_sec"])
-    results["skewed_load"] = skewed
+    if "skewed_load" in sel:
+        skew_devs = host_cpus(2, memory_bytes=8 * GiB)
+        skewed = {}
+        for mode, steal in (("no_steal", False), ("steal", True)):
+            skewed[mode] = _measure_skewed(small_cfgs, small_params,
+                                           skew_devs, seq, skew_requests,
+                                           skew_delay_us, steal, seed=seed)
+        skewed["steal_throughput_ratio"] = (
+            skewed["steal"]["segments_per_sec"] /
+            skewed["no_steal"]["segments_per_sec"])
+        results["skewed_load"] = skewed
 
     # ---- fault_recovery: kill a sibling mid-trace, lose nothing (ISSUE 6) ---
-    results["fault_recovery"] = _measure_fault_recovery(
-        small_cfgs, small_params, seq, fault_requests, fault_delay_us)
+    if "fault_recovery" in sel:
+        results["fault_recovery"] = _measure_fault_recovery(
+            small_cfgs, small_params, seq, fault_requests, fault_delay_us,
+            seed=seed)
 
     # ---- overload_brownout: 3x saturation, brownout off vs on (ISSUE 7) -----
-    overload = {}
-    for mode, on in (("off", False), ("on", True)):
-        overload[mode] = _measure_overload_brownout(
-            small_cfgs, small_params, seq, overload_requests,
-            overload_pace_s, overload_cheap_us, overload_heavy_us,
-            brownout=on)
-    overload["completed_or_shed_ratio"] = \
-        overload["on"]["completed_or_shed_ratio"]
-    overload["brownout_p99_improvement"] = (
-        overload["off"]["p99_ms"] / max(overload["on"]["p99_ms"], 1e-9))
-    results["overload_brownout"] = overload
+    if "overload_brownout" in sel:
+        overload = {}
+        for mode, on in (("off", False), ("on", True)):
+            overload[mode] = _measure_overload_brownout(
+                small_cfgs, small_params, seq, overload_requests,
+                overload_pace_s, overload_cheap_us, overload_heavy_us,
+                brownout=on, seed=seed)
+        overload["completed_or_shed_ratio"] = \
+            overload["on"]["completed_or_shed_ratio"]
+        overload["brownout_p99_improvement"] = (
+            overload["off"]["p99_ms"] / max(overload["on"]["p99_ms"], 1e-9))
+        results["overload_brownout"] = overload
+
+    # ---- sim_fidelity: record a real run, replay in-sim (DESIGN.md §12) -----
+    if "sim_fidelity" in sel:
+        results["sim_fidelity"] = _measure_sim_fidelity(
+            small_cfgs, small_params, seq, fidelity_requests,
+            fidelity_pace_s, fidelity_cheap_us, fidelity_heavy_us,
+            seed=seed)
 
     if csv:
-        print("serving_hotpath:variant,segments_per_sec,messages_per_request")
-        for name in ("seed", "pipelined", "coalesced"):
-            r = results[name]
-            print(f"serving_hotpath:{name},{r['segments_per_sec']:.1f},"
-                  f"{r['messages_per_request']:.1f}")
-        print(f"serving_hotpath:speedup,{results['speedup']:.2f},")
-        print(f"serving_hotpath:large_request_ratio,"
-              f"{results['large_request_ratio']:.3f},")
-        for name in ("pipelined", "coalesced"):
-            r = many[name]
-            print(f"serving_hotpath:many_small.{name},"
-                  f"{r['segments_per_sec']:.1f},{r['messages_per_request']:.1f}")
-            print(f"serving_hotpath:many_small.{name}.padding_efficiency,"
-                  f"{r['padding_efficiency']:.3f},")
-        print(f"serving_hotpath:many_small.speedup,{many['speedup']:.2f},")
-        for mode in ("fifo", "priority"):
-            r = mixed[mode]
-            print(f"serving_hotpath:mixed_priority.{mode}.high_p50/p99_ms,"
-                  f"{r['high']['p50_ms']:.1f},{r['high']['p99_ms']:.1f}")
-            print(f"serving_hotpath:mixed_priority.{mode}.bulk_p50/p99_ms,"
-                  f"{r['bulk']['p50_ms']:.1f},{r['bulk']['p99_ms']:.1f}")
-            print(f"serving_hotpath:mixed_priority.{mode}.segments_per_sec,"
-                  f"{r['segments_per_sec']:.1f},")
-        print(f"serving_hotpath:mixed_priority.hp_p50_improvement,"
-              f"{mixed['hp_p50_improvement']:.2f},")
-        print(f"serving_hotpath:mixed_priority.hp_p99_improvement,"
-              f"{mixed['hp_p99_improvement']:.2f},")
-        print(f"serving_hotpath:mixed_priority.throughput_ratio,"
-              f"{mixed['throughput_ratio']:.3f},")
-        for mode in ("no_steal", "steal"):
-            r = skewed[mode]
-            print(f"serving_hotpath:skewed_load.{mode},"
-                  f"{r['segments_per_sec']:.1f},"
-                  f"{r['stolen_descriptors']}")
-        print(f"serving_hotpath:skewed_load.steal_throughput_ratio,"
-              f"{skewed['steal_throughput_ratio']:.2f},")
-        fr = results["fault_recovery"]
-        print(f"serving_hotpath:fault_recovery.completed_ratio,"
-              f"{fr['completed_ratio']:.3f},{fr['segments_replayed']}")
-        print(f"serving_hotpath:fault_recovery.recovery_s,"
-              f"{fr['recovery_s']:.4f},{fr['recovery_ok']:.0f}")
-        for mode in ("off", "on"):
-            r = overload[mode]
-            print(f"serving_hotpath:overload_brownout.{mode}.p50/p99_ms,"
-                  f"{r['p50_ms']:.1f},{r['p99_ms']:.1f}")
-            print(f"serving_hotpath:overload_brownout.{mode}.completed/shed,"
-                  f"{r['completed']},{r['shed']}")
-        print(f"serving_hotpath:overload_brownout.completed_or_shed_ratio,"
-              f"{overload['completed_or_shed_ratio']:.3f},")
-        print(f"serving_hotpath:overload_brownout.brownout_p99_improvement,"
-              f"{overload['brownout_p99_improvement']:.2f},")
-        for name in ("pipelined", "coalesced"):
-            for stage, t in results[name]["stage_timings"].items():
-                print(f"serving_hotpath:{name}.{stage},"
-                      f"{t['total_s']:.4f},{t['count']}")
+        print(f"serving_hotpath:rng_seed,{seed},")
+        if "core" in sel:
+            print("serving_hotpath:variant,segments_per_sec,"
+                  "messages_per_request")
+            for name in ("seed", "pipelined", "coalesced"):
+                r = results[name]
+                print(f"serving_hotpath:{name},{r['segments_per_sec']:.1f},"
+                      f"{r['messages_per_request']:.1f}")
+            print(f"serving_hotpath:speedup,{results['speedup']:.2f},")
+            print(f"serving_hotpath:large_request_ratio,"
+                  f"{results['large_request_ratio']:.3f},")
+        if "many_small" in sel:
+            many = results["many_small"]
+            for name in ("pipelined", "coalesced"):
+                r = many[name]
+                print(f"serving_hotpath:many_small.{name},"
+                      f"{r['segments_per_sec']:.1f},"
+                      f"{r['messages_per_request']:.1f}")
+                print(f"serving_hotpath:many_small.{name}"
+                      f".padding_efficiency,{r['padding_efficiency']:.3f},")
+            print(f"serving_hotpath:many_small.speedup,"
+                  f"{many['speedup']:.2f},")
+        if "mixed_priority" in sel:
+            mixed = results["mixed_priority"]
+            for mode in ("fifo", "priority"):
+                r = mixed[mode]
+                print(f"serving_hotpath:mixed_priority.{mode}"
+                      f".high_p50/p99_ms,"
+                      f"{r['high']['p50_ms']:.1f},{r['high']['p99_ms']:.1f}")
+                print(f"serving_hotpath:mixed_priority.{mode}"
+                      f".bulk_p50/p99_ms,"
+                      f"{r['bulk']['p50_ms']:.1f},{r['bulk']['p99_ms']:.1f}")
+                print(f"serving_hotpath:mixed_priority.{mode}"
+                      f".segments_per_sec,{r['segments_per_sec']:.1f},")
+            print(f"serving_hotpath:mixed_priority.hp_p50_improvement,"
+                  f"{mixed['hp_p50_improvement']:.2f},")
+            print(f"serving_hotpath:mixed_priority.hp_p99_improvement,"
+                  f"{mixed['hp_p99_improvement']:.2f},")
+            print(f"serving_hotpath:mixed_priority.throughput_ratio,"
+                  f"{mixed['throughput_ratio']:.3f},")
+        if "skewed_load" in sel:
+            skewed = results["skewed_load"]
+            for mode in ("no_steal", "steal"):
+                r = skewed[mode]
+                print(f"serving_hotpath:skewed_load.{mode},"
+                      f"{r['segments_per_sec']:.1f},"
+                      f"{r['stolen_descriptors']}")
+            print(f"serving_hotpath:skewed_load.steal_throughput_ratio,"
+                  f"{skewed['steal_throughput_ratio']:.2f},")
+        if "fault_recovery" in sel:
+            fr = results["fault_recovery"]
+            print(f"serving_hotpath:fault_recovery.completed_ratio,"
+                  f"{fr['completed_ratio']:.3f},{fr['segments_replayed']}")
+            print(f"serving_hotpath:fault_recovery.recovery_s,"
+                  f"{fr['recovery_s']:.4f},{fr['recovery_ok']:.0f}")
+        if "overload_brownout" in sel:
+            overload = results["overload_brownout"]
+            for mode in ("off", "on"):
+                r = overload[mode]
+                print(f"serving_hotpath:overload_brownout.{mode}"
+                      f".p50/p99_ms,{r['p50_ms']:.1f},{r['p99_ms']:.1f}")
+                print(f"serving_hotpath:overload_brownout.{mode}"
+                      f".completed/shed,{r['completed']},{r['shed']}")
+            print(f"serving_hotpath:overload_brownout"
+                  f".completed_or_shed_ratio,"
+                  f"{overload['completed_or_shed_ratio']:.3f},")
+            print(f"serving_hotpath:overload_brownout"
+                  f".brownout_p99_improvement,"
+                  f"{overload['brownout_p99_improvement']:.2f},")
+        if "sim_fidelity" in sel:
+            sf = results["sim_fidelity"]
+            print(f"serving_hotpath:sim_fidelity.real.req_per_s/p99_ms,"
+                  f"{sf['real']['req_per_s']:.1f},{sf['real']['p99_ms']:.1f}")
+            print(f"serving_hotpath:sim_fidelity.sim.req_per_s/p99_ms,"
+                  f"{sf['sim']['req_per_s']:.1f},{sf['sim']['p99_ms']:.1f}")
+            print(f"serving_hotpath:sim_fidelity.throughput_ratio,"
+                  f"{sf['throughput_ratio']:.3f},")
+            print(f"serving_hotpath:sim_fidelity.p99_ratio,"
+                  f"{sf['p99_ratio']:.3f},")
+            print(f"serving_hotpath:sim_fidelity.fidelity_ok,"
+                  f"{sf['fidelity_ok']:.0f},")
+        if "core" in sel:
+            for name in ("pipelined", "coalesced"):
+                for stage, t in results[name]["stage_timings"].items():
+                    print(f"serving_hotpath:{name}.{stage},"
+                          f"{t['total_s']:.4f},{t['count']}")
     return results
 
 
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="serving hot-path A/B benchmark")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for every scenario's inputs and "
+                         "member skews (recorded in the results as "
+                         "rng_seed)")
+    ap.add_argument("--scenario", action="append", default=[],
+                    metavar="NAME", choices=SCENARIOS,
+                    help=f"run only the named scenarios (repeatable); "
+                         f"default all of {list(SCENARIOS)}")
+    ap.add_argument("--replay-trace", default=None, metavar="PATH",
+                    help="replay a recorded request trace "
+                         "(launch/serve.py --record-trace or "
+                         "system.trace_recorder) against a fake-device "
+                         "system instead of running scenarios")
+    ap.add_argument("--replay-speed", type=float, default=1.0,
+                    help="time-compression factor for --replay-trace")
+    args = ap.parse_args(argv)
+    if args.replay_trace:
+        replay_trace(args.replay_trace, speed=args.replay_speed)
+    else:
+        run(seed=args.seed, scenarios=args.scenario or None)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

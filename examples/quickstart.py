@@ -123,6 +123,29 @@ def main():
         print(f"recovered to level {ctl.level}; "
               f"stats={ {k: v for k, v in ctl.stats().items() if k != 'tiers'} }")
 
+    # 6. record a trace, replay it in the simulator (DESIGN.md §12):
+    #    attach a TraceRecorder to the live system, then re-run the exact
+    #    offered load through the discrete-event model — the same policy
+    #    code under a virtual clock, so what-ifs (a different allocation,
+    #    dispatch-ahead K, the EDF prototype) answer in milliseconds.
+    from repro.serving.sim import ServiceModel, SimSystem, WorkerSpec
+    from repro.serving.trace import TraceRecorder
+    with InferenceSystem(cfgs, params, alloc, segment_size=32,
+                         max_seq=SEQ) as system:
+        rec = TraceRecorder()               # or launch/serve.py --record-trace
+        system.trace_recorder = rec
+        client = EnsembleClient(system)
+        client.predict(X)
+        client.predict(X[:4], PredictOptions(priority="high", members=[0]))
+    svc = ServiceModel.from_delays({0: 500, 1: 500})   # 500us per chunk
+    sim = SimSystem(svc, [WorkerSpec(0, 16), WorkerSpec(1, 16)],
+                    segment_size=32).run(rec.events())
+    r = sim.results()
+    print(f"\nreplayed {r['offered']} recorded requests in-sim: "
+          f"completed={r['completed']} p99={r['p99_ms']:.2f}ms "
+          f"(deterministic; see benchmarks/sim_bench.py for the "
+          f"forecast/tuner/EDF studies)")
+
     # Going further: the allocation above is frozen at deploy time.  When
     # the live workload drifts (one member runs hot, traffic spikes), attach
     # the online reconfiguration controller — live replanning + instance

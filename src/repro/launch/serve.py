@@ -97,6 +97,13 @@ def main(argv=None):
                     help="confidence-gated cascade: tier results whose "
                          "top1-top2 margin falls below this escalate to the "
                          "dropped members (with --brownout)")
+    # simulation / planning (DESIGN.md §12)
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="append every offered request to PATH as JSONL "
+                         "(t, rows, priority, deadline_ms, members) for "
+                         "offline replay: benchmarks/serving_hotpath.py "
+                         "--replay-trace or the discrete-event simulator "
+                         "(repro.serving.sim)")
     ap.add_argument("--admission-budget-mib", type=float, default=0.0,
                     help="global in-flight input-byte budget; requests "
                          "beyond it are refused with 429 + Retry-After "
@@ -199,6 +206,12 @@ def main(argv=None):
     if budget is not None:
         print(f"admission budget: {args.admission_budget_mib:.1f} MiB "
               f"in-flight input bytes (429 + Retry-After beyond it)")
+    recorder = None
+    if args.record_trace:
+        from repro.serving.trace import TraceRecorder
+        recorder = TraceRecorder(path=args.record_trace)
+        system.trace_recorder = recorder
+        print(f"recording request trace to {args.record_trace}")
     cache = PredictionCache(args.cache_capacity) if args.cache_capacity else None
     httpd, batcher = serve(system, port=args.port, cache=cache)
     print(f"serving {len(cfgs)} models / {len(system.workers)} workers on "
@@ -216,6 +229,10 @@ def main(argv=None):
         httpd.shutdown()
         batcher.stop()
         system.shutdown()
+        if recorder is not None:
+            recorder.close()
+            print(f"trace: {len(recorder.events())} requests recorded to "
+                  f"{args.record_trace}")
     return 0
 
 

@@ -32,8 +32,8 @@ import threading
 from collections import deque
 from typing import Optional, Sequence
 
-from repro.serving.segments import (PRIORITY_HIGH, PRIORITY_NORMAL, Span,
-                                    priority_level)
+from repro.serving.segments import (PRIORITY_HIGH, PRIORITY_NORMAL,
+                                    ChunkDesc, Span, priority_level)
 
 
 def chunk_level(spans: Sequence[Span]) -> int:
@@ -285,3 +285,85 @@ class DispatchQueue(AdmissionQueue):
     def drain_descriptors(self) -> list:
         raise TypeError("chunks are bound to their worker's ring slots; "
                         "migrate AdmissionQueue descriptors instead")
+
+
+def chunk_deadline(chunk: ChunkDesc) -> float:
+    """Earliest absolute deadline among the requests whose spans the chunk
+    carries; +inf when none of them has one."""
+    d = float("inf")
+    for sp in chunk.spans:
+        rd = sp.req.deadline
+        if rd is not None and rd < d:
+            d = rd
+    return d
+
+
+class EDFDispatchQueue(DispatchQueue):
+    """Earliest-deadline-first chunk dispatch (ROADMAP item m, prototype).
+
+    Replaces the two static dispatch classes with a single heap ordered by
+    ``(chunk deadline, chunk_level, enqueue seq)``: the chunk whose
+    tightest-deadline request expires soonest dispatches first; deadline
+    ties fall back to the existing priority classes, then FIFO.
+    Deadline-less chunks rank at +inf, so a pure two-class workload behaves
+    exactly like :class:`DispatchQueue` (the EDF order degenerates to
+    class-then-FIFO) — EDF only changes behavior when deadlines actually
+    differentiate the backlog.
+
+    Control items (the ``None`` shutdown sentinel, ``FlushBarrier``) keep
+    FIFO order in a side lane and are released only once every queued chunk
+    has dispatched — a conservative barrier: EDF may reorder chunks
+    *between* flushes, so a barrier that overtook a reordered chunk would
+    acknowledge a flush that has not fully dispatched yet.
+
+    Status: validated in the simulator (DESIGN.md §12; `sim.edf` bench
+    gate) ahead of wiring into the live Worker — the live default remains
+    :class:`DispatchQueue`."""
+
+    def __init__(self):
+        super().__init__()
+        self._eheap = []                      # (deadline, level, seq, chunk)
+        self._eseq = 0
+        self._control = deque()
+
+    def _push_locked(self, item) -> None:
+        if isinstance(item, ChunkDesc):
+            self._eseq += 1
+            heapq.heappush(self._eheap, (chunk_deadline(item), item.level,
+                                         self._eseq, item))
+        else:
+            self._control.append(item)
+
+    def put(self, item, priority: int = PRIORITY_NORMAL) -> None:
+        with self._not_empty:
+            self._push_locked(item)
+            self._not_empty.notify()
+
+    def put_many(self, items, priority: int = PRIORITY_NORMAL) -> None:
+        if not items:
+            return
+        with self._not_empty:
+            for item in items:
+                self._push_locked(item)
+            self._not_empty.notify()
+
+    def _pop(self):
+        if self._eheap:
+            return heapq.heappop(self._eheap)[3]
+        if self._control:
+            return self._control.popleft()
+        raise queue.Empty
+
+    def _size_locked(self) -> int:
+        return len(self._eheap) + len(self._control)
+
+    def depth(self, priority: int) -> int:
+        with self._lock:
+            if priority == PRIORITY_HIGH:
+                return sum(1 for e in self._eheap
+                           if e[1] == PRIORITY_HIGH)
+            return len(self._eheap) + len(self._control) - sum(
+                1 for e in self._eheap if e[1] == PRIORITY_HIGH)
+
+    def take_high(self):
+        return None                 # no side lane to express-pop from

@@ -26,6 +26,7 @@ all the bounded greedy needs.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -62,6 +63,12 @@ class LiveBench:
         self._lat: Dict[Tuple[int, str, int], float] = {}
         # uniform prior: demand shares start equal and drift with traffic
         self._demand = np.ones(len(self.cfgs), np.float64)
+        # forecast-fed shares (DESIGN.md §12): (shares, expires_at) or None.
+        # ``clock`` is overridable so the simulator can expire forecasts on
+        # virtual time; everything else in this class is time-free.
+        self._forecast: Optional[Tuple[np.ndarray, float]] = None
+        self.forecasts = 0
+        self.clock = time.perf_counter
         self.observations = 0
         self.requests = 0
         self.calls = 0
@@ -89,9 +96,35 @@ class LiveBench:
             for m in members:
                 self._demand[m] += rows
 
+    def set_forecast(self, shares: Sequence[float], *,
+                     ttl_s: float = 5.0) -> None:
+        """Install predicted per-member demand shares (item j).  While the
+        forecast is *fresh* (within ``ttl_s`` of ``self.clock()``) it
+        replaces the trailing EWMA in :meth:`demand_shares`; once stale the
+        profile falls back to the decayed EWMA, which kept updating the
+        whole time — a dead forecaster degrades to pre-forecast behavior
+        rather than freezing the planner on an old prediction."""
+        s = np.asarray(shares, np.float64)
+        if s.shape != (len(self.cfgs),) or (s < 0).any() or s.sum() <= 0:
+            raise ValueError(f"forecast shares must be {len(self.cfgs)} "
+                             f"non-negative values, got {shares!r}")
+        with self._lock:
+            self._forecast = (s / s.sum(), self.clock() + float(ttl_s))
+            self.forecasts += 1
+
+    def forecast_fresh(self) -> bool:
+        with self._lock:
+            return (self._forecast is not None
+                    and self.clock() < self._forecast[1])
+
     # ---- the profile ---------------------------------------------------------
     def demand_shares(self) -> np.ndarray:
         with self._lock:
+            if self._forecast is not None:
+                shares, expires = self._forecast
+                if self.clock() < expires:
+                    return shares.copy()
+                self._forecast = None       # stale: drop, fall back to EWMA
             d = self._demand.copy()
         return d / d.sum()
 
@@ -157,6 +190,8 @@ class LiveBench:
         return {"observations": self.observations,
                 "requests": self.requests,
                 "bench_calls": self.calls,
+                "forecasts": self.forecasts,
+                "forecast_fresh": self.forecast_fresh(),
                 "demand_shares": [round(float(s), 4)
                                   for s in self.demand_shares()],
                 "latency_ewma_s": lat}

@@ -102,6 +102,7 @@ class InferenceSystem:
         self.controller = None           # attached ReconfigController, if any
         self._profiler = None            # attached LiveBench sink, if any
         self.brownout = None             # attached BrownoutController (§11)
+        self.trace_recorder = None       # attached TraceRecorder (§12)
         # global admitted-work budget (DESIGN.md §11 backpressure): an int
         # is a byte cap, an AdmissionBudget carries byte and/or row caps
         if admission_budget is None or \
@@ -482,6 +483,13 @@ class InferenceSystem:
         combine = opts.combine or self.combine
         if combine not in _COMBINE_RULES:
             raise ValueError(f"unknown combine rule {combine!r}")
+        rec = self.trace_recorder
+        if rec is not None and plan and n > 0 and members:
+            # record the *offered* request — before brownout tier planning
+            # or admission control can trim it — so a replayed trace
+            # regenerates the original demand (DESIGN.md §12)
+            rec.record(n, priority=opts.priority,
+                       deadline_ms=opts.deadline_ms, members=members)
         if n == 0 or not members:
             # zero-work request: resolve immediately instead of taking an
             # in-flight slot and completing synchronously inside _submit —
