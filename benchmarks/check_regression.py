@@ -56,6 +56,12 @@ import sys
 # over the uncontrolled run (absolute floor; the scenario runs on simulated
 # device time, the wide relative tolerance absorbs the committed baseline's
 # much larger measured headroom).
+# tracing_overhead gates the ISSUE-9 acceptance: the span layer plus
+# flight recorder must cost <= 5% on the fake-worker hot path.  Gates
+# here are lower-bound only (cur >= floor), so the <= 1.05 budget is
+# encoded as the derived boolean ``overhead_ok = ratio <= 1.05``
+# computed by the bench itself, gated at an absolute floor of 1.0;
+# the raw overhead_ratio is reported in BENCH_serving.json ungated.
 # serving.sim_fidelity + the sim.* block gate the ISSUE-8 acceptance:
 # the calibrated simulator reproduces a real fake-device run's throughput
 # and p99 within 20% (fidelity_ok folds both ratios), a 1M-request trace
@@ -85,6 +91,7 @@ GATED_METRICS = [
     ("serving.fault_recovery.recovery_ok", 0.0, 1.0),
     ("serving.overload_brownout.completed_or_shed_ratio", 0.0, 1.0),
     ("serving.overload_brownout.brownout_p99_improvement", 0.85, 2.0),
+    ("serving.tracing_overhead.overhead_ok", 0.0, 1.0),
     ("serving.sim_fidelity.fidelity_ok", 0.0, 1.0),
     ("sim.scale.scale_ok", 0.0, 1.0),
     ("sim.scale.determinism_ok", 0.0, 1.0),

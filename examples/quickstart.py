@@ -82,7 +82,11 @@ def main():
     #    all-or-nothing shutdown.  Inject a deterministic crash into one of
     #    member 0's two data-parallel siblings: the supervisor quarantines
     #    it and replays its outstanding chunks on the survivor — zero lost
-    #    requests, full quality.
+    #    requests, full quality.  With tracing=True the flight recorder
+    #    (DESIGN.md §13) captures the whole drill as per-chunk span
+    #    timelines — the quarantine and chunk replay show up as annotated
+    #    instants on the admission track.
+    import tempfile
     from repro.core import AllocationMatrix
     from repro.serving import FaultPlan, FaultSpec
     alloc = AllocationMatrix(devices, [c.name for c in cfgs],
@@ -91,7 +95,7 @@ def main():
                              worker="w1.0"))
     with InferenceSystem(cfgs, params, alloc, segment_size=32, max_seq=SEQ,
                          supervise=True, watchdog_s=5.0, retry_budget=2,
-                         fault_plan=fp) as system:
+                         fault_plan=fp, tracing=True) as system:
         hs = [system.predict_async(X) for _ in range(6)]
         quals = [(h.result(120.0).shape[0], h.quality) for h in hs]
         c = system.serving_counters()
@@ -100,6 +104,20 @@ def main():
               f"quarantines={c.get('quarantines', 0):.0f} "
               f"segments_replayed={c.get('segments_replayed', 0):.0f}")
         print("all requests served at quality:", [q for _, q in quals])
+        # dump the drill's trace as Chrome-trace / Perfetto JSON — open it
+        # at https://ui.perfetto.dev (or chrome://tracing) to see each
+        # request's admission -> pack -> dispatch -> predict -> transfer ->
+        # combine timeline, with the replay annotations on the faulted
+        # worker.  A live deployment serves the same JSON at GET /v2/trace
+        # (serve.py --trace-out / --flight-recorder).
+        trace_path = os.path.join(tempfile.gettempdir(),
+                                  "fault_drill_trace.json")
+        trace = EnsembleClient(system).dump_trace(trace_path)
+        replay = [e for e in trace["traceEvents"]
+                  if e.get("name") == "quarantine_replay"]
+        print(f"flight recorder: {len(trace['traceEvents'])} events -> "
+              f"{trace_path} (quarantine_replay instants: {len(replay)}; "
+              f"load it at https://ui.perfetto.dev)")
 
     # 5. overload brownout (DESIGN.md §11): when offered load outruns
     #    capacity, the BrownoutController degrades *quality* instead of

@@ -108,6 +108,19 @@ def main(argv=None):
                     help="global in-flight input-byte budget; requests "
                          "beyond it are refused with 429 + Retry-After "
                          "instead of queuing unboundedly (0 disables)")
+    # observability / tracing (DESIGN.md §13)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing and write the flight "
+                         "recorder as Chrome-trace / Perfetto JSON to PATH "
+                         "at shutdown (also live at GET /v2/trace); open "
+                         "it at https://ui.perfetto.dev")
+    ap.add_argument("--flight-recorder", type=int, default=0, metavar="N",
+                    help="per-track flight-recorder ring capacity in "
+                         "events (enables tracing without --trace-out; "
+                         "anomalies — watchdog stalls, deadline-miss "
+                         "bursts, brownout shifts, exhausted retries — "
+                         "freeze tagged dumps at GET /v2/trace?dumps=1; "
+                         "0 = off unless --trace-out, default ring 4096)")
     args = ap.parse_args(argv)
 
     import jax
@@ -163,6 +176,7 @@ def main(argv=None):
         from repro.serving.admission import AdmissionBudget
         budget = AdmissionBudget(
             max_bytes=int(args.admission_budget_mib * 1024 ** 2))
+    trace_cap = args.flight_recorder or (4096 if args.trace_out else 0)
     system = InferenceSystem(cfgs, params, res.matrix,
                              segment_size=args.segment_size,
                              max_seq=args.seq, combine=args.combine,
@@ -174,7 +188,12 @@ def main(argv=None):
                              retry_budget=args.retry_budget,
                              nan_guard=args.nan_guard,
                              fault_plan=fault_plan,
-                             admission_budget=budget)
+                             admission_budget=budget,
+                             tracing=trace_cap > 0,
+                             trace_capacity=trace_cap or 4096)
+    if trace_cap:
+        print(f"span tracing on (flight recorder {trace_cap} events/track; "
+              f"GET /v2/trace, anomaly dumps at ?dumps=1)")
     if not args.no_supervise:
         print(f"supervision on (watchdog {args.watchdog_s:.1f}s, retry "
               f"budget {args.retry_budget}); worker failures quarantine the "
@@ -233,6 +252,14 @@ def main(argv=None):
             recorder.close()
             print(f"trace: {len(recorder.events())} requests recorded to "
                   f"{args.record_trace}")
+        if args.trace_out:
+            import json
+            trace = system.tracer.export()
+            with open(args.trace_out, "w") as f:
+                json.dump(trace, f)
+            print(f"span timeline: {len(trace['traceEvents'])} events "
+                  f"written to {args.trace_out} (open at "
+                  f"https://ui.perfetto.dev)")
     return 0
 
 

@@ -18,6 +18,7 @@ from repro.serving.segments import (DEFAULT_SEGMENT_SIZE, PRIORITY_HIGH,
                                     SlotRef, WorkerCrashed)
 from repro.serving.server import AdaptiveBatcher, serve
 from repro.serving.system import InferenceSystem
+from repro.serving.tracing import FlightRecorder, Tracer
 from repro.serving.worker import Worker, bucket_for, make_predict_fn
 from repro.serving.control import (BrownoutController, LiveBench,
                                    ReconfigController, Supervisor)
@@ -33,4 +34,4 @@ __all__ = ["InferenceSystem", "Worker", "make_predict_fn", "bucket_for",
            "FaultPlan", "FaultSpec", "InjectedFault", "Supervisor",
            "ServingUnavailable", "WorkerCrashed", "MemberUnavailable",
            "RetriesExhausted", "Overloaded", "AdmissionBudget",
-           "BrownoutController"]
+           "BrownoutController", "Tracer", "FlightRecorder"]

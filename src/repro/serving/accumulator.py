@@ -56,7 +56,8 @@ import numpy as np
 from repro.serving import segments as seg
 from repro.serving.metrics import StageTimers
 from repro.serving.segments import (DeadlineExceeded, MemberUnavailable,
-                                    Message, Request, RequestCancelled)
+                                    Message, Request, RequestCancelled,
+                                    RetriesExhausted)
 
 
 class RequestHandle:
@@ -121,7 +122,8 @@ class PredictionAccumulator:
                  num_models: int, *, combine: str = "mean",
                  weights: Optional[np.ndarray] = None,
                  timers: Optional[StageTimers] = None,
-                 on_complete: Optional[Callable[[RequestHandle], None]] = None):
+                 on_complete: Optional[Callable[[RequestHandle], None]] = None,
+                 tracer=None):
         if combine not in ("mean", "weighted", "vote", "pallas"):
             raise ValueError(f"unknown combine rule {combine!r}")
         self.q = prediction_queue
@@ -133,6 +135,10 @@ class PredictionAccumulator:
             self.weights = np.full(num_models, 1.0 / num_models, np.float32)
         self.timers = timers or StageTimers()
         self.on_complete = on_complete
+        self.tracer = tracer
+        # ring cached once: rings are cleared in place, never replaced
+        self._tr_ring = tracer.ring("accumulator") \
+            if tracer is not None else None
         self.ready_count = 0
         self.oom = threading.Event()
         self.all_ready = threading.Event()
@@ -175,14 +181,27 @@ class PredictionAccumulator:
             if error is not None:
                 handle.error = error
             self._requests.pop(handle.req.rid, None)
+        tr = self.tracer
         if isinstance(error, DeadlineExceeded):
             # deadline-miss rate feeds the brownout pressure signal (§11)
             self.timers.inc("deadline_misses")
+            if tr is not None and tr.enabled:
+                tr.instant("accumulator", "deadline_miss", rid=handle.req.rid)
+                tr.note_deadline_miss()
         if error is None and handle.req.t_submit is not None:
             # per-class end-to-end latency (the hp_p50 SLO view, §7)
+            lat = time.perf_counter() - handle.req.t_submit
             self.timers.latency(
                 "high" if handle.req.priority == seg.PRIORITY_HIGH
-                else "normal", time.perf_counter() - handle.req.t_submit)
+                else "normal", lat)
+            if tr is not None and tr.enabled:
+                tr.instant("accumulator", "complete", rid=handle.req.rid,
+                           args={"latency_ms": round(lat * 1e3, 3),
+                                 "quality": round(handle.quality, 4)})
+        elif error is not None and tr is not None and tr.enabled \
+                and not isinstance(error, DeadlineExceeded):
+            tr.instant("accumulator", "fail", rid=handle.req.rid,
+                       args={"error": type(error).__name__})
         handle.done.set()
         if self.on_complete is not None:
             self.on_complete(handle)
@@ -196,7 +215,14 @@ class PredictionAccumulator:
             handle = self._requests.get(rid)
         if handle is None:
             return False
-        return self._finish(handle, error)
+        done = self._finish(handle, error)
+        if done and isinstance(error, RetriesExhausted):
+            tr = self.tracer
+            if tr is not None and tr.enabled:
+                # freeze the flight recorder: the spans leading up to the
+                # exhausted replay are exactly what a post-mortem needs
+                tr.anomaly("retries_exhausted", f"request {rid}: {error}")
+        return done
 
     # ---- the accumulation loop -------------------------------------------------
     def start(self):
@@ -359,7 +385,13 @@ class PredictionAccumulator:
                     # outside the lock) but must not kill this loop
                     self._finish(handle, e)
                     return
-        self.timers.add("accumulate", time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.timers.add("accumulate", t1 - t0)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            self._tr_ring.append(
+                ("X", "accumulate", t0, t1 - t0, msg.rid,
+                 msg.s, rows, None))
         if handle.remaining == 0:
             self._complete(handle)
 

@@ -106,7 +106,16 @@ class AdmissionBudget:
 
 
 class AdmissionQueue:
-    """Unbounded two-level MPSC queue with ``queue.Queue``-style blocking."""
+    """Unbounded two-level MPSC queue with ``queue.Queue``-style blocking.
+
+    ``trace_hook`` (optional, wired by the system when tracing is on) is
+    called as ``hook(kind, items, level)`` after batch transitions —
+    ``"enqueue"`` on :meth:`put_many`, ``"steal"`` / ``"drain"`` after
+    work moves between workers — so the tracer can annotate timelines
+    with queue-level control-plane facts.  Hooks run outside the queue
+    lock; when unset the cost is one attribute check."""
+
+    trace_hook = None
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -127,6 +136,9 @@ class AdmissionQueue:
         with self._not_empty:
             self._levels[priority].extend(items)
             self._not_empty.notify()
+        hook = self.trace_hook
+        if hook is not None:
+            hook("enqueue", items, priority)
 
     def _pop(self):
         for level in (PRIORITY_HIGH, PRIORITY_NORMAL):
@@ -224,7 +236,7 @@ class AdmissionQueue:
                         isinstance(q[-1], tuple):
                     stolen.append(q.pop())
                 stolen.reverse()
-                return stolen
+                return self._stolen(stolen)
 
             def urgency(i):          # (no-deadline flag, deadline) ascending
                 d = getattr(q[i][0], "deadline", None)
@@ -239,6 +251,12 @@ class AdmissionQueue:
             for _ in range(len(q) - first):
                 q.pop()
             q.extend(kept)
+        return self._stolen(stolen)
+
+    def _stolen(self, stolen: list) -> list:
+        hook = self.trace_hook
+        if hook is not None and stolen:
+            hook("steal", stolen, None)
         return stolen
 
     def drain_descriptors(self) -> list:
@@ -258,6 +276,9 @@ class AdmissionQueue:
                 for item in self._levels[level]:
                     (out if isinstance(item, tuple) else keep).append(item)
                 self._levels[level] = keep
+        hook = self.trace_hook
+        if hook is not None and out:
+            hook("drain", out, None)
         return out
 
     def depth(self, priority: int) -> int:
@@ -346,6 +367,9 @@ class EDFDispatchQueue(DispatchQueue):
             for item in items:
                 self._push_locked(item)
             self._not_empty.notify()
+        hook = self.trace_hook
+        if hook is not None:
+            hook("enqueue", items, priority)
 
     def _pop(self):
         if self._eheap:

@@ -324,3 +324,17 @@ class EnsembleClient:
                               if self.cache is not None else None),
                     "controller": ctl.stats() if ctl is not None else None}
         return self._http_json("GET", "/metrics")
+
+    def dump_trace(self, path: Optional[str] = None) -> dict:
+        """Chrome-trace / Perfetto JSON of the flight recorder (DESIGN.md
+        §13), whichever transport (in-process ``system.tracer.export()`` or
+        ``GET /v2/trace``).  With ``path`` the JSON is also written to disk
+        — open it at https://ui.perfetto.dev or chrome://tracing."""
+        if self.system is not None:
+            trace = self.system.tracer.export()
+        else:
+            trace = self._http_json("GET", "/v2/trace")
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(trace, f)
+        return trace

@@ -60,10 +60,15 @@ class DeviceCombiner:
     device math itself is dispatched asynchronously)."""
 
     def __init__(self, name: str, prediction_queue: "queue.Queue[Message]",
-                 timers: Optional[StageTimers] = None):
+                 timers: Optional[StageTimers] = None, tracer=None):
         self.name = name
         self.prediction_queue = prediction_queue
         self.timers = timers
+        self.tracer = tracer
+        self._tr_track = f"combine.{name}"
+        # ring cached once: rings are cleared in place, never replaced
+        self._tr_ring = tracer.ring(self._tr_track) \
+            if tracer is not None else None
         self._lock = threading.Lock()
         # rid -> {s: (member contributions, expected member-rows)}
         self._expected: Dict[int, Dict[int, Tuple[int, int]]] = {}
@@ -164,8 +169,14 @@ class DeviceCombiner:
                     del self._expected[req.rid]
         if flush is not None:
             self._post(req.rid, s, *flush)
+        t1 = time.perf_counter()
         if self.timers is not None:
-            self.timers.add("combine", time.perf_counter() - t0)
+            self.timers.add("combine", t1 - t0)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            self._tr_ring.append(
+                ("X", "combine", t0, t1 - t0, req.rid,
+                 s, m, flush is not None))
 
     def _post(self, rid: int, s: int, part: _SegPartial, count: int) -> None:
         """The single device->host transfer per device per segment."""

@@ -264,6 +264,13 @@ class BrownoutController:
         self.transitions += 1
         self.system.timers.inc("brownout_transitions")
         self.system.timers.gauge("brownout_level", new_level)
+        tr = getattr(self.system, "tracer", None)
+        if tr is not None:
+            # brownout shifts are exactly when a timeline dump is worth
+            # keeping: tag the snapshot with the level change
+            tr.anomaly("brownout_level_change",
+                       f"level {old} -> {new_level}",
+                       args={"from": old, "to": new_level})
         if new_level > old and self.demote_inflight:
             self._demote_inflight(self._tier_set(new_level))
 

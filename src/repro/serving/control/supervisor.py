@@ -94,6 +94,11 @@ class Supervisor:
             if h == HEALTH_DEAD or h == HEALTH_DEGRADED:
                 if h == HEALTH_DEGRADED:
                     system.timers.inc("stalls_detected")
+                    tr = getattr(system, "tracer", None)
+                    if tr is not None:
+                        # freeze the flight recorder before quarantine tears
+                        # the stalled worker's state down (DESIGN.md §13)
+                        tr.anomaly("watchdog_stall", w.worker_id)
                 system.quarantine_instance(w, retry_budget=self.retry_budget)
                 hit += 1
         return hit

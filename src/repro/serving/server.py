@@ -25,9 +25,17 @@ Endpoints (stdlib only):
                     with per-request options honored.
   GET  /metrics     serving counters (padding efficiency, rows, batches,
                     spans), per-worker queue-depth gauges (+ the rolling
-                    hp_p50_ms gauge), per-priority-class latency p50/p99,
-                    per-stage timings incl. dispatch_wait.high/normal,
-                    cache hit rates (ROADMAP item d)
+                    hp_p50_ms gauge), per-priority-class latency p50/p99
+                    (from fixed-bucket log-scale histograms; raw buckets
+                    under "latency_hist"), per-stage timings incl.
+                    dispatch_wait.high/normal, cache hit rates (ROADMAP
+                    item d).  With ``?format=prom`` — or an ``Accept``
+                    header naming ``text/plain`` / ``openmetrics`` — the
+                    same surface renders as Prometheus text exposition
+                    0.0.4 (typed, labeled families; DESIGN.md §13)
+  GET  /v2/trace    Chrome-trace / Perfetto JSON of the flight recorder
+                    (DESIGN.md §13); ``?dumps=1`` returns the
+                    anomaly-triggered dumps instead
   GET  /health      -> {"status": "ok", "workers": N}
   GET  /allocation  -> the allocation matrix
 """
@@ -45,6 +53,7 @@ import numpy as np
 import math
 
 from repro.serving.client import EnsembleClient
+from repro.serving.metrics import PROM_CONTENT_TYPE, prometheus_text
 from repro.serving.segments import (DeadlineExceeded, Overloaded,
                                     PredictOptions, ServingUnavailable)
 from repro.serving.system import InferenceSystem
@@ -182,15 +191,48 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
             self.end_headers()
             self.wfile.write(body)
 
+        def _text(self, code: int, body: str, content_type: str):
+            data = body.encode()
+            self.send_response(code)
+            self.send_header("Content-Type", content_type)
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+
+        def _wants_prom(self, query: str) -> bool:
+            """Content negotiation for /metrics: explicit ``?format=prom``
+            wins; otherwise an Accept header naming the text exposition
+            (Prometheus scrapers send ``text/plain;version=0.0.4`` or an
+            openmetrics type — a browser's ``text/html,...`` does not
+            match)."""
+            if "format=prom" in query:
+                return True
+            accept = self.headers.get("Accept", "")
+            return "openmetrics" in accept or "text/plain" in accept
+
         def do_GET(self):
-            if self.path == "/health":
+            path, _, query = self.path.partition("?")
+            if path == "/health":
                 self._json(200, {"status": "ok",
                                  "workers": len(system.workers),
                                  "models": [c.name for c in system.cfgs]})
-            elif self.path == "/allocation":
+            elif path == "/allocation":
                 self._json(200, {"models": system.alloc.model_names,
                                  "A": system.alloc.A.tolist()})
-            elif self.path == "/metrics":
+            elif path == "/v2/trace":
+                # flight-recorder export (DESIGN.md §13): the live Perfetto
+                # timeline, or the anomaly-triggered dumps with ?dumps=1
+                if "dumps=1" in query:
+                    self._json(200, {"dumps": system.tracer.dumps(),
+                                     "anomalies": system.tracer.anomalies()})
+                else:
+                    self._json(200, system.tracer.export())
+            elif path == "/metrics":
+                if self._wants_prom(query):
+                    system.serving_gauges()   # refresh worker health gauges
+                    self._text(200, prometheus_text(system.timers),
+                               PROM_CONTENT_TYPE)
+                    return
                 ctl = system.controller
                 self._json(200, {
                     "counters": system.serving_counters(),
@@ -198,6 +240,8 @@ def serve(system: InferenceSystem, host: str = "127.0.0.1", port: int = 8600,
                     # per-class p50/p99 (incl. hp_p50 — the SLO the
                     # chunk-granular preemption targets, DESIGN.md §3)
                     "latency": system.latency_snapshot(),
+                    # raw log-scale buckets behind those percentiles (§13)
+                    "latency_hist": system.timers.latency_histogram(),
                     "stages": system.stage_timings(),
                     "cache": ({"hits": cache.hits, "misses": cache.misses}
                               if cache is not None else None),

@@ -53,8 +53,9 @@ from repro.serving.segments import (PRIORITY_HIGH, PRIORITY_NORMAL,
 from repro.serving.sim.events import EventLoop
 from repro.serving.sim.service import ServiceModel
 from repro.serving.trace import TraceEvent
+from repro.serving.tracing import Tracer
 from repro.serving.worker import (ADAPTIVE_DEPTH, DISPATCH_AHEAD, RING_SLOTS,
-                                  bucket_for)
+                                  _span_rids, bucket_for)
 
 __all__ = ["SimSystem", "SimWorker", "WorkerSpec", "SimRequest"]
 
@@ -335,6 +336,12 @@ class SimWorker:
         for level, descs in sorted(by_level.items()):
             self._dispatch_q.put_many(descs, level)
         self.system._log("flush", now, self.worker_id, len(chunks), b.fill)
+        tr = self.system.tracer
+        if tr.enabled:
+            tr.ring(f"{self.worker_id}/batcher").append(
+                ("i", "pack", now, 0.0,
+                 tuple({sp.req.rid for sp in b.spans}),
+                 {"chunks": len(chunks), "rows": b.fill}, None, None))
 
     def _arm_linger(self) -> None:
         b = self.open
@@ -394,10 +401,17 @@ class SimWorker:
         key = self.device.key()
         t0 = loop.now
         t = max(t0, dev_free.get(key, 0.0)) + svc.dispatch_overhead_s
+        tr = self.system.tracer
+        tr_ring = tr.ring(f"{self.worker_id}/predict") if tr.enabled else None
         for chunk in group:
             self.timers.add(
                 "dispatch_wait.high" if chunk.level == PRIORITY_HIGH
                 else "dispatch_wait.normal", loop.now - chunk.t_enq)
+            if tr_ring is not None:
+                tr_ring.append(
+                    ("X", "dispatch_wait", chunk.t_enq,
+                     loop.now - chunk.t_enq, _span_rids(chunk.spans),
+                     None, None, None))
             live = [sp for sp in chunk.spans
                     if not (sp.req.dropped()
                             or sp.req.demoted_for(self.model_idx))]
@@ -420,6 +434,13 @@ class SimWorker:
                                   chunk.bucket, chunk.valid, dt)
         sys_._log("chunk", sys_.loop.now, self.worker_id, chunk.bucket,
                   chunk.valid)
+        tr = sys_.tracer
+        if tr.enabled and dt > 0.0:
+            tr.ring(f"{self.worker_id}/predict").append(
+                ("X", "predict", sys_.loop.now - dt, dt,
+                 _span_rids(chunk.spans),
+                 {"bucket": chunk.bucket, "valid": chunk.valid},
+                 None, None))
         for sp in chunk.spans:
             sys_._finish_span(self, sp, serviced=dt > 0.0)
         if chunk.ref.release() and chunk.ref.slot is not None:
@@ -465,7 +486,8 @@ class SimSystem:
                  max_wait_us: float = 500.0, linger: str = "fixed",
                  coalesce: bool = True, queue_cls=DispatchQueue,
                  weights: Optional[Sequence[float]] = None,
-                 live=None, record_events: bool = False):
+                 live=None, record_events: bool = False,
+                 tracing: bool = False, trace_capacity: int = 4096):
         self.service = service
         self.segment_size = int(segment_size)
         self.dispatch_ahead = int(dispatch_ahead)
@@ -475,6 +497,11 @@ class SimSystem:
         self.queue_cls = queue_cls
         self.loop = EventLoop()
         self.timers = StageTimers()
+        # same span API as the live system, on the virtual clock — a live
+        # run and its sim replay export directly comparable timelines
+        # (DESIGN.md §13)
+        self.tracer = Tracer(enabled=tracing, capacity=trace_capacity,
+                             clock=lambda: self.loop.now)
         self.M = M if M is not None else \
             (1 + max(s.model_idx for s in workers))
         self.combine = "mean"
@@ -710,6 +737,13 @@ class SimSystem:
         self.accumulator._requests[rid] = req
         self.open_requests += 1
         self._log("arrive", now, rid, ev.rows, pri)
+        if self.tracer.enabled:
+            # admission is instantaneous in virtual time: a zero-duration
+            # root span keeps the live timeline's shape
+            self.tracer.ring("admission").append(
+                ("X", "submit", now, 0.0, rid,
+                 {"priority": pri, "members": list(members),
+                  "rows": ev.rows}, None, None))
         touched: Dict[SimWorker, None] = {}
         for s in range(req.num_segments()):
             for m in members:
@@ -755,6 +789,10 @@ class SimSystem:
             self.timers.inc("deadline_misses")
         self.accumulator._requests.pop(req.rid, None)
         self._log("done", now, req.rid)
+        if self.tracer.enabled:
+            self.tracer.instant("accumulator", "complete", t=now,
+                                rid=req.rid,
+                                args={"latency_ms": round(lat * 1e3, 3)})
 
     def _fail_request(self, req: SimRequest) -> None:
         if req.failed:
@@ -766,6 +804,9 @@ class SimSystem:
         self.timers.inc("rows_dropped", max(0, req.remaining))
         self.accumulator._requests.pop(req.rid, None)
         self._log("drop", self.loop.now, req.rid)
+        if self.tracer.enabled:
+            self.tracer.instant("accumulator", "fail", rid=req.rid,
+                                args={"error": "DeadlineExceeded"})
 
     # ---- the run loop --------------------------------------------------------
     def run(self, trace: Sequence[TraceEvent], *,

@@ -73,7 +73,9 @@ class InferenceSystem:
                  supervise_interval_s: float = 0.05,
                  retry_budget: int = 2,
                  nan_guard: bool = False,
-                 admission_budget=None):
+                 admission_budget=None,
+                 tracing: bool = False,
+                 trace_capacity: int = 4096):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
@@ -124,10 +126,16 @@ class InferenceSystem:
         self.num_classes = classes.pop()
 
         self.timers = StageTimers()
+        # span tracing (DESIGN.md §13): the Tracer always exists so tracing
+        # can be toggled at runtime; when disabled every emitter pays one
+        # attribute check and no ring ever allocates
+        from repro.serving.tracing import Tracer
+        self.tracer = Tracer(enabled=tracing, capacity=trace_capacity)
         self.prediction_queue: "queue.Queue[Message]" = queue.Queue()
         self.accumulator = PredictionAccumulator(
             self.prediction_queue, self.M, combine=combine, weights=weights,
-            timers=self.timers, on_complete=self._on_request_complete)
+            timers=self.timers, on_complete=self._on_request_complete,
+            tracer=self.tracer)
 
         # request submission / in-flight window / buffer pool
         self._submit_lock = threading.Lock()
@@ -142,7 +150,8 @@ class InferenceSystem:
         for d, m, batch in alloc.workers():
             if device_combine and d not in self.combiners:
                 self.combiners[d] = DeviceCombiner(
-                    f"d{d}", self.prediction_queue, timers=self.timers)
+                    f"d{d}", self.prediction_queue, timers=self.timers,
+                    tracer=self.tracer)
             w = self._make_worker(d, m, batch, generation=0)
             self.workers.append(w)
             self._instances[m].append(w)
@@ -183,11 +192,27 @@ class InferenceSystem:
                    profiler=self._profiler, oom_sentinel=oom_sentinel,
                    fake_delay_us=self._fake_delay_us,
                    dispatch_ahead=self.dispatch_ahead,
-                   fault_plan=self._fault_plan, nan_guard=self._nan_guard)
+                   fault_plan=self._fault_plan, nan_guard=self._nan_guard,
+                   tracer=self.tracer)
         w.device_idx = d
+        w.input_queue.trace_hook = self._trace_queue_event(w.worker_id)
         if self.supervisor is not None:   # supervised containment for live
             w.on_crash = self.supervisor.on_worker_crash   # spawns/respawns
         return w
+
+    def _trace_queue_event(self, worker_id: str):
+        """AdmissionQueue ``trace_hook`` for one worker: annotates the
+        admission track with steal/drain migrations.  Plain enqueues are
+        already covered by the submit span, so they return on one string
+        compare."""
+        tracer = self.tracer
+        def hook(kind, items, level, _tr=tracer, _wid=worker_id):
+            if kind == "enqueue" or not _tr.enabled or not items:
+                return
+            _tr.instant("admission", f"queue_{kind}",
+                        rid=tuple(sorted({req.rid for req, _s in items})),
+                        args={"worker": _wid, "units": len(items)})
+        return hook
 
     def spawn_instance(self, d: int, m: int, batch_size: int, *,
                        generation: Optional[int] = None) -> Worker:
@@ -206,7 +231,8 @@ class InferenceSystem:
             with self._submit_lock:
                 if d not in self.combiners:
                     self.combiners[d] = DeviceCombiner(
-                        f"d{d}", self.prediction_queue, timers=self.timers)
+                        f"d{d}", self.prediction_queue, timers=self.timers,
+                        tracer=self.tracer)
         # warm-up compile outside the routing lock: submission stays live
         w = self._make_worker(d, m, batch_size, generation=gen,
                               oom_sentinel=False)
@@ -297,6 +323,9 @@ class InferenceSystem:
             if not any(x.device_idx == w.device_idx for x in inst):
                 self.alloc.A[w.device_idx, w.model_idx] = 0
             self.timers.inc("quarantines")
+            if self.tracer.enabled:
+                self.tracer.instant("admission", "quarantine",
+                                    args={"worker": w.worker_id})
             # the final health verdict persists in the gauge snapshot after
             # the worker leaves the routing tables (serving_gauges only
             # refreshes live workers)
@@ -333,6 +362,14 @@ class InferenceSystem:
                     replayed += 1
                 if replayed:
                     self.timers.inc("segments_replayed", replayed)
+                if self.tracer.enabled:
+                    # chunk-replay provenance: which requests were re-striped
+                    # off the quarantined worker, and how many units moved
+                    self.tracer.instant(
+                        "admission", "quarantine_replay",
+                        rid=tuple(sorted({req.rid for req, _ in units})),
+                        args={"worker": w.worker_id, "replayed": replayed,
+                              "exhausted": len(exhausted)})
             elif all(len(v) == 0 for v in self._instances.values()):
                 # last instance of the last member: nothing left to degrade
                 # onto — the paper's global sentinel applies (and it must be
@@ -391,6 +428,10 @@ class InferenceSystem:
             req.demoted.add(m)
         self.timers.inc("requests_demoted")
         self.timers.inc("members_demoted", len(drop))
+        if self.tracer.enabled:
+            self.tracer.instant("admission", "demote", rid=rid,
+                                args={"drop": sorted(drop),
+                                      "kept": sorted(kept)})
         return True
 
     def retry_after_s(self) -> float:
@@ -631,6 +672,17 @@ class InferenceSystem:
             # it back exactly once; any earlier exception leaves it unset
             # and _broadcast's except path credits instead
             req.budget_charge = charge
+            if self.tracer.enabled:
+                # the admission span: buffer take + striping + enqueue —
+                # the root of the request's timeline (DESIGN.md §13)
+                self.tracer.ring("admission").append(
+                    ("X", "submit", req.t_submit,
+                     time.perf_counter() - req.t_submit, rid,
+                     {"priority": req.priority, "members": list(members),
+                      "rows": n, "quality": tier_quality,
+                      "deadline_ms": None if deadline is None else round(
+                          1e3 * (deadline - req.t_submit), 1)},
+                     None, None))
         return handle
 
     # ---- modes -----------------------------------------------------------------

@@ -111,6 +111,7 @@ from repro.serving import segments as seg
 from repro.serving.admission import DispatchQueue, chunk_level
 from repro.serving.faults import FaultPlan
 from repro.serving.metrics import StageTimers
+from repro.serving.tracing import pack_times
 from repro.serving.segments import (FLUSH, ChunkDesc, FlushBarrier, Message,
                                     Request, SHUTDOWN, SlotRef, Span)
 
@@ -157,6 +158,14 @@ def make_predict_fn(cfg: ModelConfig, use_kernel: bool = False,
     return jax.jit(predict, donate_argnums=(1,) if donate else ())
 
 
+def _span_rids(spans):
+    """rid annotation for a chunk-level trace event: the bare rid, or a
+    tuple when the chunk coalesced rows from several requests."""
+    if len(spans) == 1:
+        return spans[0].req.rid
+    return tuple({sp.req.rid for sp in spans})
+
+
 class _OpenBatch:
     """The batcher's in-progress coalesced batch."""
     __slots__ = ("slot", "buf", "width", "fill", "spans", "deadline")
@@ -185,7 +194,7 @@ class Worker:
                  fake_delay_us: int = 0,
                  dispatch_ahead: int = DISPATCH_AHEAD,
                  fault_plan: Optional[FaultPlan] = None,
-                 nan_guard: bool = False):
+                 nan_guard: bool = False, tracer=None):
         self.worker_id = worker_id
         self.cfg = cfg
         self.batch_size = batch_size
@@ -219,6 +228,17 @@ class Worker:
         # queue may reorder right up to the moment of dispatch)
         self.dispatch_ahead = max(1, dispatch_ahead)
         self._dispatch_q = DispatchQueue()
+        # span tracing (DESIGN.md §13): emitters check tracer.enabled first
+        # and reuse timestamps the pipeline already takes, so the disabled
+        # cost is one attribute check per site
+        self.tracer = tracer
+        self._tr_batcher = f"{worker_id}/batcher"
+        self._tr_predict = f"{worker_id}/predict"
+        self._tr_sender = f"{worker_id}/sender"
+        # batcher ring cached once: rings are cleared in place, never
+        # replaced, and _flush is too hot for a per-flush locked lookup
+        self._tr_batcher_ring = tracer.ring(self._tr_batcher) \
+            if tracer is not None else None
         self._dispatch_sem = threading.BoundedSemaphore(self.dispatch_ahead)
         # SimpleQueue (C implementation): per-chunk hand-offs are hot, and
         # depth is already bounded by the dispatch-ahead window (the sem is
@@ -467,6 +487,18 @@ class Worker:
             level = chunk_level(spans)
             by_level.setdefault(level, []).append(
                 ChunkDesc(ref, off, bucket, valid, spans, level, now))
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            # ONE slot-pack instant per flush, stamped with the chunks'
+            # shared t_enq — the timestamp the grouped dispatch-round
+            # records join against to recover per-chunk request ids, so
+            # this is the only place the slot's spans are walked for
+            # attribution (batch.spans, not chunks x spans)
+            rids = {sp.req.rid for sp in batch.spans}
+            self._tr_batcher_ring.append(
+                ("i", "pack", now, 0.0,
+                 rids.pop() if len(rids) == 1 else tuple(rids),
+                 len(chunks), max(by_level), None))
         for level, descs in sorted(by_level.items()):
             self._dispatch_q.put_many(descs, level)
 
@@ -637,6 +669,8 @@ class Worker:
         every span belongs to a cancelled/expired request is never
         dispatched: it rides the group as a skipped chunk (the sender owns
         the staging dict and the DROPPED accounting)."""
+        tr = self.tracer
+        tr_ring = tr.ring(self._tr_predict) if tr is not None else None
         while True:
             # grab every instantly-available window token (>= 1, blocking
             # for the first) and pop that many chunks in ONE queue lock
@@ -655,16 +689,19 @@ class Worker:
             group: List[tuple] = []
             committed = 0
             stop = False
+            ctl = False                   # round saw a non-chunk item
             t0 = time.perf_counter()
             for item in items:
                 if item is None:
                     stop = True
+                    ctl = True
                     break
                 if isinstance(item, FlushBarrier):
                     if group:         # every earlier chunk is dispatched
                         self._send_q.put(group)
                         group = []
                     item.done.set()
+                    ctl = True
                     continue
                 chunk: ChunkDesc = item
                 self.timers.add("dispatch_wait.high" if chunk.level ==
@@ -705,7 +742,26 @@ class Worker:
             if group:
                 self._send_q.put(group)
             if committed:
-                self.timers.timed("predict", t0)
+                t1 = self.timers.timed("predict", t0)
+            if tr is not None and tr.enabled and items:
+                # ONE flat rid-free record per pop round (invisible to
+                # the GC), with ZERO per-chunk work in the loop above:
+                # the popped list is reused as the round's chunk group
+                # (filtered only when a control item rode along — rare).
+                # dur slot = absolute pop time, slot a = the packed
+                # per-chunk enqueue times, slots b/c = the attached
+                # predict duration / committed count.  Request
+                # attribution is recovered at export time by joining
+                # each t_enq against this worker's pack instants, so the
+                # hot loop never walks span lists.
+                dw = items if not ctl else \
+                    [c for c in items if isinstance(c, ChunkDesc)]
+                if dw:
+                    tr_ring.append(
+                        ("G", "dispatch_wait", dw[0].t_enq, t0, None,
+                         pack_times([c.t_enq for c in dw]),
+                         (t1 - t0) if committed else None,
+                         committed or None))
             if stop:
                 self._send_q.put(None)
                 return
@@ -730,6 +786,8 @@ class Worker:
         resolution message."""
         on_device = self.combiner is not None
         staging: Dict[tuple, list] = {}     # (rid, s) -> [rows, {seg_off: P}]
+        tr = self.tracer
+        tr_ring = tr.ring(self._tr_sender) if tr is not None else None
         hb = self._hb["sender"]
         while True:
             hb[:] = [_HB_WAIT, time.perf_counter()]
@@ -743,6 +801,15 @@ class Worker:
                 self._send_chunk(chunk, y, skipped, staging, on_device,
                                  profiled)
             now = self.timers.timed("transfer", t0)   # sync+scatter, group
+            if tr is not None and tr.enabled:
+                # grouped single span: slot a carries the group's shared
+                # dispatch (pop) time — the correlation key export joins
+                # against this worker's "G" dispatch-round record (which
+                # in turn joins the pack instants) to recover request
+                # ids, so the sender packs nothing per chunk
+                tr_ring.append(
+                    ("g", "transfer", t0, now - t0, None,
+                     batch[0][2], len(batch), None))
             if profiled:
                 # live bench feed (DESIGN.md §8): the group shares one
                 # dispatch timestamp, so dispatch-to-materialized wall time
@@ -798,6 +865,11 @@ class Worker:
                         self.combiner.unexpect(sp.req, sp.s)):
                     self.prediction_queue.put(Message(
                         sp.s, self.model_idx, None, rid=sp.req.rid))
+                    tr = self.tracer
+                    if tr is not None and tr.enabled:
+                        tr.ring(self._tr_sender).append(
+                            ("i", "forgive_demoted", tr.clock(), 0.0,
+                             sp.req.rid, sp.s, None, None))
                 continue
             if skipped or sp.req.dropped():
                 # purge any rows staged by this segment's earlier chunks
@@ -811,6 +883,11 @@ class Worker:
                     dropped_rids.add(sp.req.rid)
                     self.prediction_queue.put(Message(
                         seg.DROPPED, None, None, rid=sp.req.rid))
+                    tr = self.tracer
+                    if tr is not None and tr.enabled:
+                        tr.ring(self._tr_sender).append(
+                            ("i", "dropped", tr.clock(), 0.0,
+                             sp.req.rid, sp.s, None, None))
                 continue
             st = staging.get(key)
             if st is None:
@@ -833,6 +910,11 @@ class Worker:
             # unit (bounded by deadline / retry) instead of corrupting Y.
             if self._ledger.pop(key, None) is None:
                 continue
+            # no forward instant here: the pop-gate moment is already
+            # observable as the downstream combine/accumulate span for
+            # (rid, s), and this path runs per (segment, member) — hot
+            # enough that an extra clock call + emit showed up in the
+            # tracing_overhead gate
             if y is None and not st[1]:    # fake predictor: instant zeros
                 P = np.zeros((hi - lo, self.num_classes), np.float32)
             else:
