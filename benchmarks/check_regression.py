@@ -92,6 +92,12 @@ GATED_METRICS = [
     ("serving.overload_brownout.completed_or_shed_ratio", 0.0, 1.0),
     ("serving.overload_brownout.brownout_p99_improvement", 0.85, 2.0),
     ("serving.tracing_overhead.overhead_ok", 0.0, 1.0),
+    # quantized members (ISSUE 10): int8 must buy >= 1.3x segments/sec on
+    # the heavy-member scenario, and the fused dequant-combine epilogue must
+    # match the fp32 reference within int8 tolerance (full ensemble AND a
+    # member subset — a binary verdict, no drift tolerance)
+    ("serving.quantized_members.quant_speedup", None, 1.30),
+    ("serving.quantized_members.quant_parity_ok", 0.0, 1.0),
     ("serving.sim_fidelity.fidelity_ok", 0.0, 1.0),
     ("sim.scale.scale_ok", 0.0, 1.0),
     ("sim.scale.determinism_ok", 0.0, 1.0),

@@ -101,6 +101,22 @@ check_regression.py.
 Acceptance (ISSUE 8): the simulator reproduces the real mixed-delay run's
 throughput and pooled p99 within 20% (``sim_fidelity.fidelity_ok``, gated
 by check_regression.py).
+  * ``quantized_members``  the quantization workload (ISSUE 10, DESIGN.md
+                    §14): two legs.  The *speedup* leg runs the heavy-member
+                    trace twice on simulated device time — fp32 vs int8 —
+                    with the int8 leg's ``fake_delay_us`` scaled by the
+                    dtype-aware ``AnalyticBench`` memory-term ratio (weight
+                    streaming dominates heavy members, so narrow params cut
+                    per-batch device time ~3x; the serving machinery around
+                    it is real either way).  The *parity* leg runs REAL tiny
+                    models through the fused dequant-weight-accumulate
+                    epilogue (``combine="pallas"``, int8 members) against
+                    the fp32 reference and checks the combined output and a
+                    member-subset output stay within int8 tolerance.
+Acceptance (ISSUE 10): quantized members >= 1.3x segments/sec on the
+heavy-member scenario (``quantized_members.quant_speedup``) with combine
+output within tolerance of the fp32 reference
+(``quantized_members.quant_parity_ok``), both gated by check_regression.py.
 """
 from __future__ import annotations
 
@@ -685,9 +701,88 @@ def replay_trace(path: str, *, seq: int = 16, workers: int = 2,
     return out
 
 
+def _measure_quantized_members(cfgs, params, seq: int, requests: int,
+                               heavy_delay_us: int, seed: int = 0) -> dict:
+    """One quantization pass (ISSUE 10, DESIGN.md §14).
+
+    Speedup leg: both members heavy (``heavy_delay_us`` simulated device
+    time per compiled batch) on one shared device; the int8 run scales the
+    delay by the dtype-aware ``AnalyticBench`` *memory-term* ratio — heavy
+    members are weight-streaming-bound on accelerators, and this is the
+    same term the allocator prices quantized members with — so the measured
+    segments/sec ratio isolates what narrow params buy while queues,
+    staging, and combine run for real.
+
+    Parity leg: real tiny models, fp32 system vs int8 system with the
+    device-resident pallas combine (the fused dequant-weight-accumulate
+    epilogue), full ensemble and a member subset; ``quant_parity_ok``
+    verdicts both within int8 tolerance.
+    """
+    from repro.core.bench import AnalyticBench
+    from repro.kernels import quant as kq
+    from repro.serving.system import InferenceSystem
+
+    seg_sz = 64
+    devs = host_cpus(1, memory_bytes=8 * GiB)
+    A = np.array([[seg_sz, seg_sz]])
+    alloc = AllocationMatrix(devs, [c.name for c in cfgs], A)
+    srng = np.random.default_rng([seed, 10])
+    Xs = [srng.integers(0, 512, (seg_sz, seq)).astype(np.int32)
+          for _ in range(requests)]
+
+    bench = AnalyticBench(cfgs, seq=seq)
+    ratio = (sum(bench.bytes_moved(c, seg_sz, "int8") for c in cfgs) /
+             sum(bench.bytes_moved(c, seg_sz) for c in cfgs))
+    out: dict = {"roofline_ratio": ratio}
+    for mode, dts, delay in (
+            ("fp32", None, heavy_delay_us),
+            ("int8", ["int8"] * len(cfgs), int(heavy_delay_us * ratio))):
+        with InferenceSystem(cfgs, params, alloc, segment_size=seg_sz,
+                             max_seq=seq, fake=True, fake_delay_us=delay,
+                             max_in_flight=requests,
+                             member_dtypes=dts) as system:
+            t0 = time.perf_counter()
+            handles = [system.predict_async(x) for x in Xs]
+            for h in handles:
+                h.result(600.0)
+            dt = time.perf_counter() - t0
+        out[mode] = {"requests": requests, "seconds": dt,
+                     "fake_delay_us": delay,
+                     "segments_per_sec": requests / dt}
+    out["quant_speedup"] = (out["int8"]["segments_per_sec"] /
+                            out["fp32"]["segments_per_sec"])
+
+    # ---- parity leg: real tiny models through the fused epilogue ----------
+    Xp = srng.integers(0, 512, (2 * seg_sz, seq)).astype(np.int32)
+
+    def real_run(dts):
+        with InferenceSystem(cfgs, params, alloc, segment_size=seg_sz,
+                             max_seq=seq, combine="pallas",
+                             member_dtypes=dts) as system:
+            y_full = system.predict(Xp)
+            y_sub = system.predict(Xp[:seg_sz], members=[0])
+            staged = sum(w.timers.counters.get("h2d_staged", 0)
+                         for w in system.workers)
+        return y_full, y_sub, staged
+
+    ref_full, ref_sub, _ = real_run(None)
+    q_full, q_sub, staged = real_run(["int8"] * len(cfgs))
+
+    def rel_err(y, yref):
+        return float(np.abs(y - yref).max() /
+                     max(np.abs(yref).max(), 1e-6))
+
+    out["parity_rel_err"] = rel_err(q_full, ref_full)
+    out["subset_rel_err"] = rel_err(q_sub, ref_sub)
+    out["h2d_staged"] = int(staged)
+    out["quant_parity_ok"] = float(out["parity_rel_err"] < 0.05
+                                   and out["subset_rel_err"] < 0.05)
+    return out
+
+
 SCENARIOS = ("core", "many_small", "mixed_priority", "skewed_load",
              "fault_recovery", "overload_brownout", "sim_fidelity",
-             "tracing_overhead")
+             "tracing_overhead", "quantized_members")
 
 
 def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
@@ -699,6 +794,7 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
         overload_cheap_us=400, overload_heavy_us=4000,
         fidelity_requests=150, fidelity_pace_s=0.008,
         fidelity_cheap_us=10000, fidelity_heavy_us=20000,
+        quant_requests=32, quant_delay_us=8000,
         seed=0, scenarios=None):
     import jax
     import repro.models as M
@@ -822,6 +918,12 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
             overload["off"]["p99_ms"] / max(overload["on"]["p99_ms"], 1e-9))
         results["overload_brownout"] = overload
 
+    # ---- quantized_members: int8 speedup + fused-combine parity (ISSUE 10) --
+    if "quantized_members" in sel:
+        results["quantized_members"] = _measure_quantized_members(
+            small_cfgs, small_params, seq, quant_requests, quant_delay_us,
+            seed=seed)
+
     # ---- tracing_overhead: span layer on vs off, <= 5% budget (ISSUE 9) -----
     if "tracing_overhead" in sel:
         results["tracing_overhead"] = _measure_tracing_overhead(
@@ -904,6 +1006,19 @@ def run(csv=True, n_samples=2048, seq=16, requests=24, workers=4,
             print(f"serving_hotpath:overload_brownout"
                   f".brownout_p99_improvement,"
                   f"{overload['brownout_p99_improvement']:.2f},")
+        if "quantized_members" in sel:
+            qm = results["quantized_members"]
+            for mode in ("fp32", "int8"):
+                r = qm[mode]
+                print(f"serving_hotpath:quantized_members.{mode},"
+                      f"{r['segments_per_sec']:.1f},"
+                      f"{r['fake_delay_us']}")
+            print(f"serving_hotpath:quantized_members.quant_speedup,"
+                  f"{qm['quant_speedup']:.2f},")
+            print(f"serving_hotpath:quantized_members.parity_rel_err,"
+                  f"{qm['parity_rel_err']:.4f},{qm['subset_rel_err']:.4f}")
+            print(f"serving_hotpath:quantized_members.quant_parity_ok,"
+                  f"{qm['quant_parity_ok']:.0f},{qm['h2d_staged']}")
         if "tracing_overhead" in sel:
             to = results["tracing_overhead"]
             print(f"serving_hotpath:tracing_overhead.off/on_segs_per_sec,"

@@ -164,6 +164,21 @@ def main():
           f"(deterministic; see benchmarks/sim_bench.py for the "
           f"forecast/tuner/EDF studies)")
 
+    # 7. quantized members (DESIGN.md §14): int8 params with per-channel
+    #    scales pack ~2-4x more members per device and feed the fused
+    #    dequant-weight-accumulate combine epilogue; outputs stay within
+    #    int8 tolerance of fp32.  From the CLI the same knob is
+    #    `python -m repro.launch.serve --member-dtype int8` (or a
+    #    per-member list like `--member-dtype int8,fp32`).
+    with InferenceSystem(cfgs, params, alloc, segment_size=32, max_seq=SEQ,
+                         member_dtypes=["int8", "int8"],
+                         combine="pallas") as system:
+        Y_q = EnsembleClient(system).predict(X)
+        agree = float((Y_q.argmax(1) == Y.argmax(1)).mean())
+        print(f"\nquantized ensemble (int8 + fused combine): "
+              f"{Y_q.shape[0]} rows, top-1 agreement vs fp32 "
+              f"{agree:.2f}")
+
     # Going further: the allocation above is frozen at deploy time.  When
     # the live workload drifts (one member runs hot, traffic spikes), attach
     # the online reconfiguration controller — live replanning + instance

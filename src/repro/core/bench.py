@@ -58,30 +58,47 @@ class AnalyticBench:
     """
 
     def __init__(self, cfgs: Sequence[ModelConfig], *, seq: int = 128,
-                 dtype_bytes: int = 4, overhead_s: float = 2e-4):
+                 dtype_bytes: int = 4, overhead_s: float = 2e-4,
+                 member_dtypes: Optional[Sequence[Optional[str]]] = None):
         self.cfgs = list(cfgs)
         self.seq = seq
         self.dtype_bytes = dtype_bytes
         self.overhead_s = overhead_s
+        # per-member execution dtype (DESIGN.md §14): narrows both the
+        # roofline's param-streaming term and the fit_mem footprint
+        self.member_dtypes = list(member_dtypes) if member_dtypes else None
         self.calls = 0
 
-    def worker_time(self, dev, cfg: ModelConfig, batch: int) -> float:
-        flops = batch * self.seq * cfg.flops_per_token(self.seq)
+    def bytes_moved(self, cfg: ModelConfig, batch: int,
+                    member_dtype: Optional[str] = None) -> float:
+        """The roofline's memory term: streamed param bytes (narrowed by the
+        member dtype, DESIGN.md §14) plus fp32 activation traffic."""
         act_per_tok = (2 * cfg.d_model + (cfg.d_ff or 2 * cfg.d_model)) * self.dtype_bytes
-        bytes_moved = (cfg.active_param_count() * self.dtype_bytes
-                       + batch * self.seq * act_per_tok)
+        param_bytes = mem._param_bytes_per_elem(member_dtype, self.dtype_bytes)
+        return (cfg.active_param_count() * param_bytes
+                + batch * self.seq * act_per_tok)
+
+    def worker_time(self, dev, cfg: ModelConfig, batch: int,
+                    member_dtype: Optional[str] = None) -> float:
+        flops = batch * self.seq * cfg.flops_per_token(self.seq)
+        bytes_moved = self.bytes_moved(cfg, batch, member_dtype)
         return self.overhead_s + max(flops / dev.peak_flops,
                                      bytes_moved / dev.mem_bw)
+
+    def _member_dtype(self, m: int) -> Optional[str]:
+        return self.member_dtypes[m] if self.member_dtypes else None
 
     def __call__(self, alloc: AllocationMatrix) -> float:
         self.calls += 1
         if not alloc.is_valid():
             return 0.0
-        if not mem.fit_mem(alloc, self.cfgs, self.seq, self.dtype_bytes):
+        if not mem.fit_mem(alloc, self.cfgs, self.seq, self.dtype_bytes,
+                           member_dtypes=self.member_dtypes):
             return 0.0
         per_model = per_model_throughput(
             alloc, lambda d, m, b: self.worker_time(alloc.devices[d],
-                                                    self.cfgs[m], b))
+                                                    self.cfgs[m], b,
+                                                    self._member_dtype(m)))
         return min(per_model)
 
 

@@ -3,20 +3,43 @@
 Per-worker footprint = params + activation workspace (batch-dependent) +
 decode KV/SSM cache (batch- and seq-dependent — our beyond-paper extension
 for stateful LLM serving, DESIGN.md §9.3).
+
+Param storage is dtype-size-aware (DESIGN.md §14): a member executing at
+int8/fp8 holds its weights at 1 byte/param (+~3% for the per-channel scales)
+while activations stay at the compute dtype, so quantized members roughly
+double worst-fit packing density.  Pass ``member_dtypes`` (one dtype name
+per model, None entries meaning fp32) to the allocation-level predicates.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
 from repro.core.allocation import AllocationMatrix
 from repro.core.devices import DeviceSpec
+from repro.kernels.quant import dtype_bytes as _param_dtype_bytes
+
+# per-channel scale overhead of the quantized param layout (one f32 per
+# output channel; ~1/32 of the int8 payload at typical channel widths)
+_SCALE_OVERHEAD = 1.03
+
+
+def _param_bytes_per_elem(member_dtype: Optional[str],
+                          dtype_bytes: int) -> float:
+    """Bytes per param element for a member dtype (None -> the activation
+    dtype, preserving the historical fp32-params assumption)."""
+    if member_dtype is None:
+        return dtype_bytes
+    b = _param_dtype_bytes(member_dtype)
+    return b * _SCALE_OVERHEAD if b == 1 else b
 
 
 def worker_bytes(cfg: ModelConfig, batch: int, seq: int,
-                 dtype_bytes: int = 4, *, serving_cache_len: int = 0) -> int:
+                 dtype_bytes: int = 4, *, serving_cache_len: int = 0,
+                 member_dtype: Optional[str] = None) -> int:
     """Footprint of one worker (one model instance at one batch size)."""
-    params = cfg.param_count() * dtype_bytes
+    params = int(cfg.param_count()
+                 * _param_bytes_per_elem(member_dtype, dtype_bytes))
     # activation workspace: residual + mixer + mlp peaks per layer (x2 for
     # double-buffering); heads term covers attention q/k/v blocks
     per_tok = (4 * cfg.d_model
@@ -33,23 +56,30 @@ def worker_bytes(cfg: ModelConfig, batch: int, seq: int,
 
 
 def device_usage(alloc: AllocationMatrix, cfgs: Sequence[ModelConfig],
-                 seq: int, dtype_bytes: int = 4) -> List[int]:
+                 seq: int, dtype_bytes: int = 4,
+                 member_dtypes: Optional[Sequence[Optional[str]]] = None
+                 ) -> List[int]:
     """Bytes used per device under matrix ``alloc``."""
     usage = [0] * len(alloc.devices)
     for d, m, batch in alloc.workers():
-        usage[d] += worker_bytes(cfgs[m], batch, seq, dtype_bytes)
+        usage[d] += worker_bytes(
+            cfgs[m], batch, seq, dtype_bytes,
+            member_dtype=member_dtypes[m] if member_dtypes else None)
     return usage
 
 
 def fit_mem(alloc: AllocationMatrix, cfgs: Sequence[ModelConfig], seq: int,
-            dtype_bytes: int = 4) -> bool:
+            dtype_bytes: int = 4,
+            member_dtypes: Optional[Sequence[Optional[str]]] = None) -> bool:
     """The paper's feasibility predicate."""
-    usage = device_usage(alloc, cfgs, seq, dtype_bytes)
+    usage = device_usage(alloc, cfgs, seq, dtype_bytes, member_dtypes)
     return all(u <= dev.memory_bytes
                for u, dev in zip(usage, alloc.devices))
 
 
 def remaining_memory(alloc: AllocationMatrix, cfgs: Sequence[ModelConfig],
-                     seq: int, dtype_bytes: int = 4) -> List[int]:
-    usage = device_usage(alloc, cfgs, seq, dtype_bytes)
+                     seq: int, dtype_bytes: int = 4,
+                     member_dtypes: Optional[Sequence[Optional[str]]] = None
+                     ) -> List[int]:
+    usage = device_usage(alloc, cfgs, seq, dtype_bytes, member_dtypes)
     return [dev.memory_bytes - u for u, dev in zip(usage, alloc.devices)]

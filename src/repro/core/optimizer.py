@@ -34,7 +34,8 @@ class AllocationOptimizer:
                  max_iter: int = 10, max_neighs: int = 100,
                  default_batch_size: int = 8, seq: int = 128,
                  cache_path: Optional[str] = None, seed: int = 0,
-                 memoize: bool = True):
+                 memoize: bool = True,
+                 member_dtypes: Optional[Sequence[Optional[str]]] = None):
         self.cfgs = list(cfgs)
         self.devices = devices
         self.bench = MemoBench(bench) if memoize else bench
@@ -45,13 +46,17 @@ class AllocationOptimizer:
         self.seq = seq
         self.cache_path = cache_path
         self.seed = seed
+        # per-member execution dtype: quantized members have ~4x smaller
+        # param footprints, so WFD packs them denser (DESIGN.md §14)
+        self.member_dtypes = list(member_dtypes) if member_dtypes else None
 
     # ---- cache --------------------------------------------------------------
     def _cache_key(self) -> str:
         import hashlib
         payload = {"models": [c.name for c in self.cfgs],
                    "devices": [d.key() for d in self.devices],
-                   "batch_sizes": self.batch_sizes, "seq": self.seq}
+                   "batch_sizes": self.batch_sizes, "seq": self.seq,
+                   "member_dtypes": self.member_dtypes}
         return hashlib.sha256(json.dumps(payload, sort_keys=True).encode()).hexdigest()
 
     def _load_cached(self) -> Optional[AllocationMatrix]:
@@ -89,7 +94,8 @@ class AllocationOptimizer:
                                       from_cache=True)
         wfd = worst_fit_decreasing(self.cfgs, self.devices,
                                    default_batch_size=self.default_batch_size,
-                                   seq=self.seq)
+                                   seq=self.seq,
+                                   member_dtypes=self.member_dtypes)
         wfd_score = self.bench(wfd)
         best, trace = bounded_greedy(wfd, self.bench, max_iter=self.max_iter,
                                      max_neighs=self.max_neighs,

@@ -21,8 +21,9 @@ class AllocationError(RuntimeError):
 
 
 def _most_remaining(alloc: AllocationMatrix, cfgs, seq: int,
-                    accelerator: bool) -> int:
-    remaining = mem.remaining_memory(alloc, cfgs, seq)
+                    accelerator: bool, member_dtypes=None) -> int:
+    remaining = mem.remaining_memory(alloc, cfgs, seq,
+                                     member_dtypes=member_dtypes)
     best, best_rem = -1, -1
     for d, dev in enumerate(alloc.devices):
         if dev.is_accelerator != accelerator:
@@ -35,23 +36,34 @@ def _most_remaining(alloc: AllocationMatrix, cfgs, seq: int,
 def worst_fit_decreasing(cfgs: Sequence[ModelConfig],
                          devices: List[DeviceSpec], *,
                          default_batch_size: int = 8,
-                         seq: int = 128) -> AllocationMatrix:
-    """Returns an allocation with every model placed exactly once."""
+                         seq: int = 128,
+                         member_dtypes=None) -> AllocationMatrix:
+    """Returns an allocation with every model placed exactly once.
+
+    ``member_dtypes`` (one dtype name per model, None = fp32) makes the
+    footprints dtype-size-aware: int8/fp8 members sort and pack at ~1/4 the
+    fp32 param bytes, roughly doubling members per device (DESIGN.md §14).
+    """
     names = [c.name for c in cfgs]
     alloc = zeros(devices, names)
+
+    def mdt(m):
+        return member_dtypes[m] if member_dtypes else None
+
     # sort models in descending order of memory size (offline heuristic)
     order = sorted(range(len(cfgs)),
-                   key=lambda m: mem.worker_bytes(cfgs[m], default_batch_size, seq),
+                   key=lambda m: mem.worker_bytes(cfgs[m], default_batch_size,
+                                                  seq, member_dtype=mdt(m)),
                    reverse=True)
     for m in order:
         placed = False
         for accelerator in (True, False):          # GPUs strictly first
-            d = _most_remaining(alloc, cfgs, seq, accelerator)
+            d = _most_remaining(alloc, cfgs, seq, accelerator, member_dtypes)
             if d < 0:
                 continue
             cand = alloc.copy()
             cand.A[d, m] = default_batch_size
-            if mem.fit_mem(cand, cfgs, seq):
+            if mem.fit_mem(cand, cfgs, seq, member_dtypes=member_dtypes):
                 alloc = cand
                 placed = True
                 break

@@ -60,6 +60,62 @@ def _accum_kernel(part_ref, p_ref, w_ref, y_ref, acc_ref, *, members: int):
         y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
+def _quant_accum_kernel(part_ref, q_ref, s_ref, w_ref, y_ref, acc_ref, *,
+                        members: int):
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = part_ref[...].astype(jnp.float32)
+
+    # Per-row dequant scale arrives replicated across the lane dim; slice
+    # lane 0 and broadcast along lanes (the TPU-cheap direction).
+    scale = s_ref[0][:, :1]
+    deq = q_ref[0].astype(jnp.float32) * scale
+    acc_ref[...] += deq * w_ref[0].astype(jnp.float32)
+
+    @pl.when(mi == members - 1)
+    def _finalize():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def ensemble_combine_quant(partial: jax.Array, q: jax.Array,
+                           scales: jax.Array, weights: jax.Array, *,
+                           block_seg: int = BLOCK_SEG, block_c: int = BLOCK_C,
+                           interpret: bool = False) -> jax.Array:
+    """Fused dequant-weight-accumulate epilogue for quantized members.
+
+    ``partial (seg, C) f32`` + Σ_m ``w_m · (q_m · s_m)`` where ``q (M, seg, C)``
+    is int8/fp8 and ``scales (M, seg, 128) f32`` carries the per-row symmetric
+    scale replicated across the lane dim (so the kernel never transposes).
+    One pass: member predictions stream through VMEM once in their narrow
+    storage dtype — dequantization, combine weighting, and accumulation into
+    the device-resident partial all happen in-register per tile.
+    """
+    m, seg, c = q.shape
+    block_seg = min(block_seg, seg)
+    block_c = min(block_c, c)
+    assert seg % block_seg == 0 and c % block_c == 0, (seg, c, block_seg, block_c)
+    assert partial.shape == (seg, c), (partial.shape, seg, c)
+
+    tile = pl.BlockSpec((block_seg, block_c), lambda s_, c_, m_: (s_, c_))
+    in_specs = [
+        tile,
+        pl.BlockSpec((1, block_seg, block_c), lambda s_, c_, m_: (m_, s_, c_)),
+        pl.BlockSpec((1, block_seg, 128), lambda s_, c_, m_: (m_, s_, 0)),
+        pl.BlockSpec((1,), lambda s_, c_, m_: (m_,)),
+    ]
+    return pl.pallas_call(
+        functools.partial(_quant_accum_kernel, members=m),
+        grid=(seg // block_seg, c // block_c, m),
+        in_specs=in_specs,
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((seg, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_seg, block_c), jnp.float32)],
+        interpret=interpret,
+    )(partial, q, scales, weights)
+
+
 def ensemble_combine(preds: jax.Array, weights: jax.Array,
                      partial: jax.Array = None, *,
                      block_seg: int = BLOCK_SEG, block_c: int = BLOCK_C,

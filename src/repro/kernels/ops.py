@@ -129,3 +129,25 @@ def ensemble_accumulate(partial, preds, weights):
     out = _comb.ensemble_combine(pp, weights, part, block_seg=bs, block_c=bc,
                                  interpret=_interpret())
     return out[:seg, :c]
+
+
+@jax.jit
+def ensemble_accumulate_quant(partial, q, scales, weights):
+    """Fused dequant-weight-accumulate: ``partial (seg, C) f32`` +
+    Σ_m ``w_m · (q_m · s_m)`` with ``q (M, seg, C)`` int8/fp8 and per-row
+    symmetric ``scales (M, seg) f32`` -> (seg, C) f32.
+
+    Member predictions cross VMEM in their narrow storage dtype; the seg
+    block floor is 32 (int8 sublane tile) rather than 8."""
+    m, seg, c = q.shape
+    bs = pow2_clamp(seg, 32, _comb.BLOCK_SEG)
+    bc = pow2_clamp(c, 128, _comb.BLOCK_C)
+    qp = _pad_to(_pad_to(q, 1, bs), 2, bc)
+    sp = _pad_to(scales.astype(jnp.float32), 1, bs)
+    # replicate the per-row scale across one lane tile so the kernel reads
+    # it in (sublane, lane) layout without a transpose
+    sp = jnp.broadcast_to(sp[:, :, None], sp.shape + (128,))
+    part = _pad_to(_pad_to(partial.astype(jnp.float32), 0, bs), 1, bc)
+    out = _comb.ensemble_combine_quant(part, qp, sp, weights, block_seg=bs,
+                                       block_c=bc, interpret=_interpret())
+    return out[:seg, :c]

@@ -22,6 +22,20 @@ def main(argv=None):
     ap.add_argument("--segment-size", type=int, default=32)
     ap.add_argument("--seq", type=int, default=16)
     ap.add_argument("--combine", default="mean")
+    ap.add_argument("--member-dtype", default="fp32",
+                    help="member execution precision (DESIGN.md §14): one "
+                         "value for all members (fp32|bf16|int8|fp8) or a "
+                         "comma-separated per-member list, e.g. "
+                         "'int8,int8,fp32,fp32'.  Quantized members store "
+                         "params narrow (per-output-channel scales), pack "
+                         "~2x denser in the allocator, and feed the fused "
+                         "dequant-combine epilogue")
+    ap.add_argument("--dispatch-queue", default="fifo",
+                    choices=("fifo", "edf"),
+                    help="predictor dispatch order: fifo = strict priority "
+                         "then arrival; edf = earliest-deadline-first "
+                         "within priority class (simulator-validated, "
+                         "DESIGN.md §12)")
     ap.add_argument("--bench", default="measured", choices=("measured", "analytic"))
     ap.add_argument("--duration", type=float, default=0.0,
                     help="serve for N seconds then exit (0 = forever)")
@@ -136,6 +150,14 @@ def main(argv=None):
     cfgs = ensemble(args.ensemble)
     if args.members:
         cfgs = cfgs[: args.members]
+    from repro.kernels.quant import validate_member_dtype
+    dts = [d.strip() for d in args.member_dtype.split(",") if d.strip()]
+    if len(dts) == 1:
+        dts = dts * len(cfgs)
+    if len(dts) != len(cfgs):
+        ap.error(f"--member-dtype expects 1 or {len(cfgs)} values, "
+                 f"got {len(dts)}")
+    member_dtypes = [validate_member_dtype(d) for d in dts]
     rng = jax.random.PRNGKey(0)
     params = [M.init_params(jax.random.fold_in(rng, i), c)
               for i, c in enumerate(cfgs)]
@@ -155,12 +177,15 @@ def main(argv=None):
         opt = AllocationOptimizer(cfgs, devices, bench, max_iter=1,
                                   max_neighs=4, batch_sizes=(8, 16),
                                   seq=args.seq,
-                                  cache_path=".repro_alloc_cache.json")
+                                  cache_path=".repro_alloc_cache.json",
+                                  member_dtypes=member_dtypes)
     else:
-        bench = AnalyticBench(cfgs, seq=args.seq)
+        bench = AnalyticBench(cfgs, seq=args.seq,
+                              member_dtypes=member_dtypes)
         opt = AllocationOptimizer(cfgs, devices, bench, max_iter=10,
                                   max_neighs=100, seq=args.seq,
-                                  cache_path=".repro_alloc_cache.json")
+                                  cache_path=".repro_alloc_cache.json",
+                                  member_dtypes=member_dtypes)
     res = opt.optimize()
     print("allocation matrix:\n" + res.matrix.pretty())
     print(f"bench: A1={res.wfd_score:.1f} -> A2={res.final_score:.1f} "
@@ -190,7 +215,14 @@ def main(argv=None):
                              fault_plan=fault_plan,
                              admission_budget=budget,
                              tracing=trace_cap > 0,
-                             trace_capacity=trace_cap or 4096)
+                             trace_capacity=trace_cap or 4096,
+                             member_dtypes=member_dtypes,
+                             dispatch_queue=args.dispatch_queue)
+    if any(d != "fp32" for d in member_dtypes):
+        print(f"member dtypes: {','.join(member_dtypes)} (quantized members "
+              f"run the fused dequant-combine epilogue)")
+    if args.dispatch_queue != "fifo":
+        print(f"dispatch queue: {args.dispatch_queue}")
     if trace_cap:
         print(f"span tracing on (flight recorder {trace_cap} events/track; "
               f"GET /v2/trace, anomaly dumps at ?dumps=1)")

@@ -12,21 +12,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ATTN, CROSS, HYBRID, SSM, SWA, ModelConfig
 
-
-def quantize_kv(x):
-    """Per-(…, head) symmetric int8 quantization along head_dim.
-
-    x: (..., hd) -> (q int8 (..., hd), scale f32 (..., 1)).  Beyond-paper
-    §Perf iteration: halves decode KV-streaming bytes (the dominant roofline
-    term for decode shapes) at ~1e-2 relative attention error."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_kv(q, scale, dtype=jnp.float32):
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+# Per-(…, head) symmetric int8 over head_dim: (..., hd) -> (q int8, scale f32
+# (..., 1)).  Halves decode KV-streaming bytes (the dominant roofline term for
+# decode shapes) at ~1e-2 relative attention error.  The math lives in the
+# shared quantization module; re-exported here for the historical import path.
+from repro.kernels.quant import dequantize_kv, quantize_kv  # noqa: F401
 
 
 def layer_cache_struct(cfg: ModelConfig, kind: str, batch: int, max_len: int,

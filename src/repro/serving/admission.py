@@ -338,8 +338,10 @@ class EDFDispatchQueue(DispatchQueue):
     acknowledge a flush that has not fully dispatched yet.
 
     Status: validated in the simulator (DESIGN.md §12; `sim.edf` bench
-    gate) ahead of wiring into the live Worker — the live default remains
-    :class:`DispatchQueue`."""
+    gate) and wired into the live Worker behind
+    ``--dispatch-queue edf`` (``InferenceSystem(dispatch_queue="edf")``);
+    the live default remains :class:`DispatchQueue` (FIFO within
+    priority class)."""
 
     def __init__(self):
         super().__init__()

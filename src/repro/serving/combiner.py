@@ -148,7 +148,8 @@ class DeviceCombiner:
         single flush transfer."""
         t0 = time.perf_counter()
         flush = None
-        nrows = int(P.shape[0])
+        # quantized members forward (q, per-row scale) tuples
+        nrows = int(P[0].shape[0]) if isinstance(P, tuple) else int(P.shape[0])
         # the heavy elementwise math runs outside the lock; only the
         # accumulate + bookkeeping is serialized
         contrib = self._contribution(req, P, req.weights[m])
@@ -188,7 +189,16 @@ class DeviceCombiner:
     def _contribution(req: Request, P, w: float):
         """Member's additive contribution (weighted prediction / vote).  For
         the pallas rule the raw device array passes through: the weighting is
-        fused into the accumulate kernel at fold time."""
+        fused into the accumulate kernel at fold time.  Quantized members
+        forward ``(q, per-row scale)`` tuples — pallas defers dequantization
+        to the fused epilogue kernel; vote uses ``q`` directly (the per-row
+        scale is positive and uniform across classes, so argmax is
+        preserved); mean/weighted dequantize here."""
+        if isinstance(P, tuple):
+            if req.combine == "pallas":
+                return P
+            from repro.kernels import quant as kq
+            P = P[0] if req.combine == "vote" else kq.dequantize(P[0], P[1])
         if req.combine == "vote":
             if isinstance(P, np.ndarray):
                 contrib = np.zeros((P.shape[0], req.num_classes), np.float32)
@@ -210,8 +220,10 @@ class DeviceCombiner:
         contribution."""
         lo, hi = req.bounds(s)
         seg_rows = hi - lo
-        a, b = row_lo, row_lo + int(contrib.shape[0])
-        if isinstance(contrib, np.ndarray):
+        quant = isinstance(contrib, tuple)     # (q, per-row scale) pair
+        a = row_lo
+        b = row_lo + int(contrib[0].shape[0] if quant else contrib.shape[0])
+        if not quant and isinstance(contrib, np.ndarray):
             if acc is None:
                 acc = np.zeros((seg_rows, req.num_classes), np.float32)
             acc[a:b] += contrib                # in-place: no temp per fold
@@ -221,10 +233,19 @@ class DeviceCombiner:
             acc = jnp.zeros((seg_rows, req.num_classes), jnp.float32)
         if req.combine == "pallas":
             from repro.kernels import ops as kops
-            # the accumulate-into-partial Pallas kernel variant, on the span
-            upd = kops.ensemble_accumulate(
-                acc[a:b], contrib[None].astype(jnp.float32),
-                jnp.full((1,), w, jnp.float32))
+            if quant:
+                # fused dequant-weight-accumulate epilogue: q stays in its
+                # narrow storage dtype all the way into the kernel
+                q, scale = contrib
+                upd = kops.ensemble_accumulate_quant(
+                    acc[a:b], q[None], scale.reshape(1, -1),
+                    jnp.full((1,), w, jnp.float32))
+            else:
+                # the accumulate-into-partial Pallas kernel variant, on the
+                # span
+                upd = kops.ensemble_accumulate(
+                    acc[a:b], contrib[None].astype(jnp.float32),
+                    jnp.full((1,), w, jnp.float32))
             return acc.at[a:b].set(upd) if (a, b) != (0, seg_rows) else upd
         return acc.at[a:b].add(contrib) if (a, b) != (0, seg_rows) \
             else acc + contrib

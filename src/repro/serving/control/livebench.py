@@ -51,14 +51,19 @@ class LiveBench:
     def __init__(self, cfgs: Sequence[ModelConfig], *, seq: int = 128,
                  alpha: float = 0.25, demand_decay: float = 0.999,
                  dtype_bytes: int = 4,
-                 fallback: Optional[AnalyticBench] = None):
+                 fallback: Optional[AnalyticBench] = None,
+                 member_dtypes: Optional[Sequence[Optional[str]]] = None):
         self.cfgs = list(cfgs)
         self.seq = seq
         self.alpha = alpha
         self.demand_decay = demand_decay
         self.dtype_bytes = dtype_bytes
-        self.fallback = fallback or AnalyticBench(cfgs, seq=seq,
-                                                  dtype_bytes=dtype_bytes)
+        # per-member execution dtype (DESIGN.md §14): quantized members'
+        # smaller param footprint feeds fit_mem and the roofline fallback
+        self.member_dtypes = list(member_dtypes) if member_dtypes else None
+        self.fallback = fallback or AnalyticBench(
+            cfgs, seq=seq, dtype_bytes=dtype_bytes,
+            member_dtypes=member_dtypes)
         self._lock = threading.Lock()
         self._lat: Dict[Tuple[int, str, int], float] = {}
         # uniform prior: demand shares start equal and drift with traffic
@@ -165,7 +170,9 @@ class LiveBench:
         dt = self._measured_latency(m, dev.key(), bucket)
         if dt is not None:
             return dt
-        return self.fallback.worker_time(dev, self.cfgs[m], bucket)
+        return self.fallback.worker_time(
+            dev, self.cfgs[m], bucket,
+            self.member_dtypes[m] if self.member_dtypes else None)
 
     # ---- the Bench -----------------------------------------------------------
     def __call__(self, alloc: AllocationMatrix) -> float:
@@ -175,7 +182,8 @@ class LiveBench:
         self.calls += 1
         if not alloc.is_valid():
             return 0.0
-        if not mem.fit_mem(alloc, self.cfgs, self.seq, self.dtype_bytes):
+        if not mem.fit_mem(alloc, self.cfgs, self.seq, self.dtype_bytes,
+                           member_dtypes=self.member_dtypes):
             return 0.0
         per_model = per_model_throughput(
             alloc, lambda d, m, b: self.worker_time(alloc.devices[d], m, b))

@@ -54,6 +54,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.kernels.quant import dtype_bytes as _dtype_bytes
 from repro.serving.segments import (Overloaded, PredictOptions,
                                     PRIORITY_HIGH, Request)
 
@@ -181,22 +182,32 @@ class BrownoutController:
         """Per-row service-time estimate per member: the cheapest live
         instance's LiveBench per-segment EWMA when warm, the simulated
         delay for fake workers, else a uniform 1.0 (an unmeasured ensemble
-        tiers by combine weight alone)."""
+        tiers by combine weight alone).  Unmeasured estimates (fake delay /
+        uniform fallback) are scaled by the member's param-dtype byte ratio
+        (DESIGN.md §14): a memory-bandwidth-bound int8 member streams ~1/4
+        the bytes, so quantized members price as the cheap tier and survive
+        deepest into a brownout.  Measured EWMAs already embed the speedup
+        and are never rescaled."""
         sys_ = self.system
         costs = []
         for m in range(sys_.M):
             best = None
+            ratio = 1.0                    # cheapest instance's dtype ratio
             for w in sys_.instances(m):
+                ratio = min(ratio, _dtype_bytes(
+                    getattr(w, "member_dtype", None)) / 4.0)
                 t = None
                 if self.live is not None:
                     t = self.live.segment_time(m, w.device.key(),
                                                w.batch_size, w.segment_size)
                 if t is None and w.fake_delay_us:
-                    t = w.fake_delay_us * 1e-6 * w.chunks_per_segment
+                    t = (w.fake_delay_us * 1e-6 * w.chunks_per_segment
+                         * (_dtype_bytes(getattr(w, "member_dtype",
+                                                 None)) / 4.0))
                 if t is not None:
                     t /= max(1, w.segment_size)
                     best = t if best is None else min(best, t)
-            costs.append(best if best is not None else 1.0)
+            costs.append(best if best is not None else ratio)
         return costs
 
     def tiers(self) -> List[Tuple[int, ...]]:

@@ -159,7 +159,12 @@ class PredictOptions:
                      "refresh" (recompute and overwrite);
     ``stream``       per-segment streaming: ``on_segment(s, lo, hi, Y_seg)``
                      fires as each segment's ensemble rows complete (set
-                     automatically by ``EnsembleClient.predict_stream``).
+                     automatically by ``EnsembleClient.predict_stream``);
+    ``member_dtype`` minimum member execution precision (DESIGN.md §14):
+                     restricts the request to members running at this
+                     precision *or better* (fp32 > bf16 > int8/fp8) — e.g.
+                     "fp32" excludes quantized members for an
+                     accuracy-critical request; None = any precision.
     """
     priority: object = "normal"
     deadline_ms: Optional[float] = None
@@ -168,6 +173,7 @@ class PredictOptions:
     cache: str = "use"
     stream: bool = False
     on_segment: Optional[Callable] = None
+    member_dtype: Optional[str] = None
 
     def __post_init__(self):
         priority_level(self.priority)       # validate eagerly
@@ -175,6 +181,9 @@ class PredictOptions:
             raise ValueError(f"unknown cache policy {self.cache!r}")
         if self.deadline_ms is not None and self.deadline_ms <= 0:
             raise ValueError("deadline_ms must be positive")
+        if self.member_dtype is not None:
+            from repro.kernels.quant import validate_member_dtype
+            validate_member_dtype(self.member_dtype)
 
     def level(self) -> int:
         return priority_level(self.priority)

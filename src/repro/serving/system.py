@@ -75,7 +75,9 @@ class InferenceSystem:
                  nan_guard: bool = False,
                  admission_budget=None,
                  tracing: bool = False,
-                 trace_capacity: int = 4096):
+                 trace_capacity: int = 4096,
+                 member_dtypes: Optional[Sequence[Optional[str]]] = None,
+                 dispatch_queue: str = "fifo"):
         alloc.validate()
         self.cfgs = list(cfgs)
         self.alloc = alloc
@@ -94,6 +96,31 @@ class InferenceSystem:
         self.dispatch_ahead = DISPATCH_AHEAD if dispatch_ahead is None \
             else dispatch_ahead
         self.M = len(self.cfgs)
+        # per-member execution precision (DESIGN.md §14): "fp32" (default),
+        # "bf16", "int8" or "fp8".  Quantized members load per-channel-scaled
+        # narrow params, emit (q, scale) logits into the fused combine
+        # epilogue, and halve-to-quarter their allocator footprint.
+        from repro.kernels.quant import validate_member_dtype
+        if member_dtypes is None:
+            self.member_dtypes: List[str] = ["fp32"] * self.M
+        else:
+            if len(member_dtypes) != self.M:
+                raise ValueError(
+                    f"member_dtypes needs {self.M} entries, "
+                    f"got {len(member_dtypes)}")
+            self.member_dtypes = [validate_member_dtype(dt or "fp32")
+                                  for dt in member_dtypes]
+        # dispatch-queue policy (ROADMAP item m): FIFO-within-priority
+        # (default) or earliest-deadline-first, simulator-validated
+        if dispatch_queue not in ("fifo", "edf"):
+            raise ValueError(f"dispatch_queue must be 'fifo' or 'edf', "
+                             f"got {dispatch_queue!r}")
+        self.dispatch_queue = dispatch_queue
+        if dispatch_queue == "edf":
+            from repro.serving.admission import EDFDispatchQueue
+            self._dispatch_queue_cls = EDFDispatchQueue
+        else:
+            self._dispatch_queue_cls = None      # worker default (FIFO)
         # retained for live instance spawn/drain (DESIGN.md §8)
         self._params_list = list(params_list)
         self._frontends = dict(frontends or {})
@@ -193,7 +220,9 @@ class InferenceSystem:
                    fake_delay_us=self._fake_delay_us,
                    dispatch_ahead=self.dispatch_ahead,
                    fault_plan=self._fault_plan, nan_guard=self._nan_guard,
-                   tracer=self.tracer)
+                   tracer=self.tracer,
+                   member_dtype=self.member_dtypes[m],
+                   dispatch_queue=self._dispatch_queue_cls)
         w.device_idx = d
         w.input_queue.trace_hook = self._trace_queue_event(w.worker_id)
         if self.supervisor is not None:   # supervised containment for live
@@ -521,6 +550,19 @@ class InferenceSystem:
         members = list(range(self.M)) if members is None else list(members)
         if any(m < 0 or m >= self.M for m in members):
             raise ValueError(f"member ids out of range: {members}")
+        if opts.member_dtype is not None:
+            # precision floor (DESIGN.md §14): keep members executing at the
+            # requested precision or better (fp32 > bf16 > int8/fp8)
+            from repro.kernels.quant import meets_precision
+            eligible = [m for m in members
+                        if meets_precision(self.member_dtypes[m],
+                                           opts.member_dtype)]
+            if not eligible:
+                raise MemberUnavailable(
+                    f"no requested member executes at precision "
+                    f">= {opts.member_dtype!r} "
+                    f"(dtypes: {[self.member_dtypes[m] for m in members]})")
+            members = eligible
         combine = opts.combine or self.combine
         if combine not in _COMBINE_RULES:
             raise ValueError(f"unknown combine rule {combine!r}")

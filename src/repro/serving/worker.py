@@ -106,6 +106,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.devices import DeviceSpec
+from repro.kernels import quant as kquant
 from repro.kernels.ops import pow2_clamp
 from repro.serving import segments as seg
 from repro.serving.admission import DispatchQueue, chunk_level
@@ -144,16 +145,32 @@ def bucket_for(n: int, batch_size: int) -> int:
 
 
 def make_predict_fn(cfg: ModelConfig, use_kernel: bool = False,
-                    donate: bool = False) -> Callable:
+                    donate: bool = False, member_dtype: str = "fp32",
+                    quant_out: bool = False) -> Callable:
     """Classification-style serving fn: tokens (b,S) -> last-token class
     scores (b, C) with C = the unpadded vocab (the paper's f(x)->y).
     ``donate`` hands the token buffer to XLA for reuse (accelerators only —
-    CPU ignores donation and would warn on every compile)."""
+    CPU ignores donation and would warn on every compile).
+
+    ``member_dtype`` != "fp32" expects params wrapped by
+    :func:`repro.kernels.quant.quantize_params` — dequantization runs inside
+    the jit so it fuses into the forward pass (weight-only quantization:
+    storage/H2D are narrow, math is fp32).  ``quant_out`` additionally
+    quantizes the output logits per row (symmetric int8 over classes) and
+    returns ``(q (b, C) int8, scale (b, 1) f32)`` for the fused
+    dequant-weight-accumulate combine epilogue; per-row scales are uniform
+    across classes, so argmax/vote downstream is unaffected."""
     from repro.models import forward
 
+    wrapped = member_dtype != "fp32"
+
     def predict(params, tokens, frontend):
-        logits, _ = forward(params, cfg, tokens, frontend, use_kernel=use_kernel)
-        return logits[:, -1, :cfg.vocab_size]
+        p = kquant.dequantize_params(params) if wrapped else params
+        logits, _ = forward(p, cfg, tokens, frontend, use_kernel=use_kernel)
+        out = logits[:, -1, :cfg.vocab_size]
+        if quant_out:
+            return kquant.quantize_symmetric(out, axis=-1)
+        return out
 
     return jax.jit(predict, donate_argnums=(1,) if donate else ())
 
@@ -194,10 +211,13 @@ class Worker:
                  fake_delay_us: int = 0,
                  dispatch_ahead: int = DISPATCH_AHEAD,
                  fault_plan: Optional[FaultPlan] = None,
-                 nan_guard: bool = False, tracer=None):
+                 nan_guard: bool = False, tracer=None,
+                 member_dtype: str = "fp32",
+                 dispatch_queue: Optional[type] = None):
         self.worker_id = worker_id
         self.cfg = cfg
         self.batch_size = batch_size
+        self.member_dtype = kquant.validate_member_dtype(member_dtype)
         self.model_idx = model_idx
         self.generation = generation     # reconfig epoch that spawned us (§8)
         self.profiler = profiler         # optional LiveBench sink
@@ -227,7 +247,9 @@ class Worker:
         # the semaphore is acquired before a chunk is *committed*, so the
         # queue may reorder right up to the moment of dispatch)
         self.dispatch_ahead = max(1, dispatch_ahead)
-        self._dispatch_q = DispatchQueue()
+        # pluggable dispatch policy (ROADMAP item m): FIFO-within-priority
+        # by default; ``EDFDispatchQueue`` orders by request deadline
+        self._dispatch_q = (dispatch_queue or DispatchQueue)()
         # span tracing (DESIGN.md §13): emitters check tracer.enabled first
         # and reuse timestamps the pipeline already takes, so the disabled
         # cost is one attribute check per site
@@ -291,6 +313,12 @@ class Worker:
         try:
             if self._fault is not None:
                 self._fault.tick(worker_id, "spawn")
+            if self.member_dtype != "fp32" and not fake:
+                # quantize host-side BEFORE device_put: the narrow tree
+                # (int8/fp8 weights + per-channel scales) is what crosses
+                # H2D and what the device holds (~dtype_bytes/4 the fp32
+                # footprint); dequantization fuses into the jitted forward
+                params = kquant.quantize_params(params, self.member_dtype)
             if self._jax_device is not None:
                 params = jax.device_put(params, self._jax_device)
             self.params = params
@@ -300,10 +328,17 @@ class Worker:
                     (batch_size, cfg.frontend_tokens, cfg.fdim), np.float32)
                 self.frontend = jnp.asarray(fe)
             donate = jax.default_backend() in ("gpu", "tpu")
-            self.predict_fn = make_predict_fn(cfg, use_kernel, donate=donate)
+            # quantized members feeding a device combiner emit (q, scale)
+            # logits for the fused dequant-weight-accumulate epilogue
+            self._quant_out = (kquant.is_quantized_dtype(self.member_dtype)
+                               and combiner is not None)
+            self.predict_fn = make_predict_fn(
+                cfg, use_kernel, donate=donate,
+                member_dtype=self.member_dtype, quant_out=self._quant_out)
             if not fake:   # warm-up compile so READY means actually servable
                 warm = jnp.zeros((batch_size, max_seq), jnp.int32)
-                np.asarray(self.predict_fn(self.params, warm, self.frontend))
+                jax.block_until_ready(
+                    self.predict_fn(self.params, warm, self.frontend))
             self.prediction_queue.put(Message(seg.READY, model_idx, None))
         except (MemoryError, RuntimeError, ValueError):
             # paper §II.C.2: {-1, None, None} triggers system shutdown.  A
@@ -691,7 +726,26 @@ class Worker:
             stop = False
             ctl = False                   # round saw a non-chunk item
             t0 = time.perf_counter()
-            for item in items:
+            # double-buffered H2D staging: after committing chunk i, chunk
+            # i+1's device_put is issued immediately (device_put is async),
+            # so its upload overlaps chunk i's compute instead of
+            # serializing upload -> compute per chunk.  One buffer deep:
+            # the SlotRef refcount already keeps the staged rows alive
+            # (the staged chunk hasn't materialized), and the dispatch
+            # window bounds how far ahead staging can run.
+            staged = None                 # (ChunkDesc, device buffer)
+            stage_h2d = not self.fake and self._jax_device is not None
+
+            def _skippable(c):
+                return c.spans and all(
+                    sp.req.dropped() or sp.req.demoted_for(self.model_idx)
+                    for sp in c.spans)
+
+            def _upload(c):
+                view = c.ref.buf[c.off:c.off + c.bucket]
+                return jax.device_put(view, self._jax_device)
+
+            for pos, item in enumerate(items):
                 if item is None:
                     stop = True
                     ctl = True
@@ -707,9 +761,7 @@ class Worker:
                 self.timers.add("dispatch_wait.high" if chunk.level ==
                                 seg.PRIORITY_HIGH else "dispatch_wait.normal",
                                 t0 - chunk.t_enq)
-                if chunk.spans and all(
-                        sp.req.dropped() or sp.req.demoted_for(self.model_idx)
-                        for sp in chunk.spans):
+                if _skippable(chunk):
                     group.append((chunk, None, t0, True))   # never dispatched
                     continue
                 committed += 1
@@ -728,14 +780,26 @@ class Worker:
                     if self.fake_delay_us:    # simulated device time
                         time.sleep(self.fake_delay_us * 1e-6)
                 else:
-                    view = chunk.ref.buf[chunk.off:chunk.off + chunk.bucket]
-                    if self._jax_device is not None:
-                        x = jax.device_put(view, self._jax_device)
+                    if staged is not None and staged[0] is chunk:
+                        x = staged[1]          # upload already in flight
+                        self.timers.inc("h2d_staged", 1)
+                    elif self._jax_device is not None:
+                        x = _upload(chunk)
                     else:
-                        x = jnp.asarray(view)
+                        x = jnp.asarray(
+                            chunk.ref.buf[chunk.off:chunk.off + chunk.bucket])
+                    staged = None
                     fe = (self.frontend[:chunk.bucket]
                           if self.frontend is not None else None)
                     y = self.predict_fn(self.params, x, fe)  # async dispatch
+                    if stage_h2d:
+                        # overlap the NEXT chunk's upload with this compute
+                        for nxt in items[pos + 1:]:
+                            if nxt is None or isinstance(nxt, FlushBarrier):
+                                break
+                            if not _skippable(nxt):
+                                staged = (nxt, _upload(nxt))
+                                break
                 group.append((chunk, y, t0, False))
             for _ in range(tokens - committed):   # unused / skipped tokens
                 self._dispatch_sem.release()
@@ -831,7 +895,9 @@ class Worker:
                     if isinstance(y, np.ndarray):    # injected NaN output
                         pass
                     else:
-                        y.block_until_ready()  # compute done; stays on device
+                        # (q, scale) tuples from quantized members block as
+                        # a pytree; compute done, arrays stay on device
+                        jax.block_until_ready(y)
                 else:
                     y = np.asarray(y)      # d->h sync
                 if self.nan_guard and isinstance(y, np.ndarray) \
@@ -894,7 +960,11 @@ class Worker:
                 st = staging[key] = [0, {}]
             if y is not None:
                 off = sp.batch_off - chunk.off   # row within this chunk
-                st[1][sp.seg_off] = y[off:off + sp.n]
+                if isinstance(y, tuple):   # quantized (q, per-row scale)
+                    st[1][sp.seg_off] = (y[0][off:off + sp.n],
+                                         y[1][off:off + sp.n])
+                else:
+                    st[1][sp.seg_off] = y[off:off + sp.n]
             st[0] += sp.n
             if st[0] < hi - lo:
                 continue                   # segment still in flight
@@ -921,6 +991,9 @@ class Worker:
                 parts = [st[1][k] for k in sorted(st[1])]
                 if len(parts) == 1:
                     P = parts[0]
+                elif isinstance(parts[0], tuple):   # quantized parts
+                    P = (jnp.concatenate([p[0] for p in parts], axis=0),
+                         jnp.concatenate([p[1] for p in parts], axis=0))
                 elif on_device:
                     P = jnp.concatenate(parts, axis=0)
                 else:

@@ -8,7 +8,7 @@ import pytest
 
 import repro.models as M
 from repro.configs import get_config
-from repro.models.cache import dequantize_kv, quantize_kv
+from repro.kernels.quant import dequantize_kv, quantize_kv
 
 
 def test_quant_roundtrip_error():
